@@ -1,0 +1,59 @@
+"""Benchmark: the Pallas blocked-MTTKRP kernel (TPU Algorithm 2).
+
+interpret-mode correctness timing vs the jnp oracle, plus the kernel's
+modeled HBM traffic against the paper's Eq (10) and the tensor-size floor
+(this container is CPU-only; on TPU the same harness reports wall time).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds
+from repro.kernels.ops import choose_blocks, mttkrp_pallas, mttkrp_traffic_model
+from repro.kernels.ref import mttkrp_ref
+
+CASES = [
+    ((64, 64, 64), 16),
+    ((128, 32, 64), 8),
+    ((32, 32, 32, 16), 8),
+]
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    for dims, rank in CASES:
+        kx, *kf = jax.random.split(key, len(dims) + 1)
+        x = jax.random.normal(kx, dims, jnp.float32)
+        fs = [
+            jax.random.normal(k, (d, rank), jnp.float32)
+            for k, d in zip(kf, dims)
+        ]
+        t0 = time.perf_counter()
+        got = mttkrp_pallas(x, fs, 0, interpret=True)
+        jax.block_until_ready(got)
+        dt = (time.perf_counter() - t0) * 1e6
+        ref = mttkrp_ref(x, fs, 0)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        plan = choose_blocks(dims, rank)
+        traffic = mttkrp_traffic_model(dims, rank, plan)
+        tensor_bytes = math.prod(dims) * 4
+        # paper ideal for VMEM-sized fast memory
+        m_words = 8 * 2 ** 20 // 4
+        lb = bounds.seq_lb(dims, rank, m_words) * 4
+        name = f"kernel_mttkrp[{'x'.join(map(str, dims))},R{rank}]"
+        derived = (
+            f"maxerr={err:.2e};plan={plan.block_i}x"
+            f"{'x'.join(map(str, plan.block_contract))}xR{plan.block_r};"
+            f"modeled_bytes={traffic['total_bytes']};"
+            f"tensor_bytes={tensor_bytes};"
+            f"traffic/tensor={traffic['total_bytes'] / tensor_bytes:.2f}"
+        )
+        out.append((name, dt, derived))
+    return out

@@ -1,0 +1,47 @@
+"""Benchmark: per-(arch × shape × mesh) roofline terms from the dry-run
+records (results/dryrun/*.json) — the §Roofline table source.
+
+Emits one row per completed cell: the three terms (seconds), bottleneck,
+and MODEL_FLOPS/HLO_FLOPs useful-compute ratio. Cells not yet swept are
+skipped (run ``python -m repro.launch.dryrun --all`` first).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import roofline_from_record
+
+RESULTS = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "results", "dryrun"),
+)
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        cell = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            out.append((f"roofline[{cell}]", 0.0, "skipped=" + rec["reason"][:60]))
+            continue
+        if rec.get("status") != "ok":
+            out.append((f"roofline[{cell}]", 0.0, "status=error"))
+            continue
+        rt = roofline_from_record(rec)
+        mem_gib = rec["memory"]["peak_bytes_est"] / 2 ** 30
+        derived = (
+            f"bottleneck={rt.bottleneck};t_comp={rt.t_compute:.3e};"
+            f"t_mem={rt.t_memory:.3e};t_coll={rt.t_collective:.3e};"
+            f"useful={rt.useful_ratio:.2f};mem_gib={mem_gib:.1f}"
+        )
+        out.append(
+            (f"roofline[{cell}]", rt.step_time_overlapped * 1e6, derived)
+        )
+    if not out:
+        out.append(("roofline[no-dryrun-results]", 0.0, "run dryrun --all"))
+    return out

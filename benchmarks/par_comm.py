@@ -1,0 +1,78 @@
+"""Benchmark: §VI-B — parallel MTTKRP communication across P and both
+NR regimes: Alg 3 (stationary), Alg 4 (general, optimal P0), the Cor 4.2
+lower bound, and the matmul baseline.
+
+Analytic per-processor words from the paper's cost expressions, with the
+grid chooser solving the integer factorization exactly. Set
+REPRO_BENCH_MEASURE=1 to additionally verify Alg 3/4 bytes against compiled
+shard_map HLO on 8 host devices (subprocess; slower — the same check runs
+in tests/test_distributed.py).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+from repro.core import bounds
+from repro.core.grid import optimal_grid, stationary_grid
+
+SWEEP_P = (16, 64, 256, 512, 4096)
+CASES = [
+    ((4096, 4096, 4096), 16),     # small NR: stationary regime
+    ((256, 256, 256), 65536),     # large NR: rank-partitioned (P0 > 1)
+    ((256, 1024, 65536), 64),     # skewed dims
+]
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    for dims, rank in CASES:
+        for procs in SWEEP_P:
+            t0 = time.perf_counter()
+            g3 = stationary_grid(dims, procs)
+            c3 = bounds.par_stationary_cost(dims, rank, g3)
+            p0, g4 = optimal_grid(dims, rank, procs)
+            c4 = bounds.par_general_cost(dims, rank, g4, p0)
+            lb = max(
+                bounds.par_lb_general(dims, rank, procs),
+                bounds.par_lb_stationary(dims, rank, procs),
+                0.0,
+            )
+            mm = bounds.matmul_par_cost(dims, rank, procs)
+            dt = (time.perf_counter() - t0) * 1e6
+            regime = bounds.nr_threshold_regime(dims, rank, procs)
+            name = f"par_comm[R{rank},P{procs}]"
+            derived = (
+                f"regime={regime};p0={p0};alg3={c3:.3g};alg4={c4:.3g};"
+                f"lb={lb:.3g};matmul={mm:.3g};"
+                f"alg4/lb={(c4 / lb if lb > 0 else float('inf')):.2f};"
+                f"matmul/alg4={mm / max(c4, 1e-9):.2f}"
+            )
+            out.append((name, dt, derived))
+    if os.environ.get("REPRO_BENCH_MEASURE"):
+        out.append(_measured_row())
+    return out
+
+
+def _measured_row() -> tuple[str, float, str]:
+    worker = os.path.join(
+        os.path.dirname(__file__), "..", "tests", "dist_worker.py"
+    )
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, worker, "check_comm_matches_eq12",
+         "check_comm_matches_eq16"],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    dt = (time.perf_counter() - t0) * 1e6
+    ok = proc.returncode == 0 and "ALL_DIST_OK" in proc.stdout
+    return (
+        "par_comm[measured_hlo_vs_eq12_eq16]",
+        dt,
+        f"exact_match={'yes' if ok else 'NO'}",
+    )

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/claim (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+from __future__ import annotations
+
+import sys
+
+MODULES = (
+    "seq_blocked",      # Thm 6.1: Alg 2 attains the sequential bounds
+    "seq_vs_matmul",    # §VI-A: Alg 2 vs matmul-baseline regimes
+    "par_comm",         # §VI-B + Thm 6.2: Alg 3/4 vs Cor 4.2 vs matmul
+    "cp_als",           # §VII: dimension-tree reuse + CP-ALS e2e
+    "kernel_mttkrp",    # Pallas Alg-2 kernel: correctness + traffic model
+    "lm_step",          # §Roofline: per-cell terms from the dry-run
+)
+
+
+def main() -> None:
+    want = set(sys.argv[1:]) or set(MODULES)
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if modname not in want:
+            continue
+        mod = __import__(f"benchmarks.{modname}", fromlist=["rows"])
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # a failing table must not kill the harness
+            print(f"{modname}[ERROR],0.0,{type(e).__name__}:{e}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

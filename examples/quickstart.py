@@ -1,0 +1,58 @@
+"""Quickstart: CP decomposition with communication-optimal MTTKRP.
+
+Decomposes a synthetic low-rank tensor with CP-ALS through three MTTKRP
+backends — einsum, the explicit-Khatri-Rao matmul baseline (what the paper
+beats), and the Pallas blocked kernel (Algorithm 2 on TPU; interpret mode
+here) — and prints the paper's communication accounting for each.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import bounds, cp_als
+from repro.core.krp import mttkrp_via_matmul
+from repro.core.mttkrp import mttkrp
+from repro.core.tensor import random_low_rank_tensor
+from repro.kernels.ops import mttkrp_pallas
+
+
+def main():
+    dims, rank = (48, 40, 32), 6
+    print(f"tensor {dims}, CP rank {rank}")
+    x, _ = random_low_rank_tensor(jax.random.PRNGKey(0), dims, rank)
+
+    backends = {
+        "einsum": mttkrp,
+        "krp_matmul_baseline": mttkrp_via_matmul,
+        "pallas_blocked_alg2": lambda t, f, n: mttkrp_pallas(
+            t, f, n, interpret=True
+        ),
+    }
+    for name, fn in backends.items():
+        res = cp_als(x, rank, n_iters=12, key=jax.random.PRNGKey(1),
+                     mttkrp_fn=fn)
+        print(f"  backend={name:22s} fit={res.final_fit:.5f}")
+
+    # the paper's sequential communication accounting: pick a fast memory
+    # far smaller than the tensor so blocking matters (M = 4096 words)
+    mem = 4096
+    b = bounds.best_block_size(dims, mem)
+    print("\nsequential model (fast memory M = %d words):" % mem)
+    print(f"  lower bound (Thm 4.1 / Fact 4.1): "
+          f"{bounds.seq_lb(dims, rank, mem):,.0f} words")
+    print(f"  Algorithm 2 (blocked, b={b}):      "
+          f"{bounds.seq_blocked_cost(dims, rank, b):,.0f} words")
+    print(f"  Algorithm 1 (unblocked):          "
+          f"{bounds.seq_unblocked_cost(dims, rank):,.0f} words")
+    print(f"  matmul baseline (§VI-A):          "
+          f"{bounds.matmul_seq_cost(dims, rank, mem):,.0f} words")
+
+
+if __name__ == "__main__":
+    main()

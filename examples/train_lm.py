@@ -1,0 +1,94 @@
+"""End-to-end training driver: a ~100M-parameter qwen2-family model on the
+synthetic bigram corpus, with the full substrate (microbatched step, AdamW,
+async checkpointing, restart recovery, straggler monitor).
+
+Demo (CPU-sized, ~2 min):
+    PYTHONPATH=src python examples/train_lm.py
+
+The full deliverable run (~100M params, a few hundred steps — hours on this
+1-core CPU container, minutes on one accelerator host):
+    PYTHONPATH=src python examples/train_lm.py --full --steps 300
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.models.sharding import NULL
+from repro.optim.schedule import cosine_schedule
+from repro.training import LoopConfig, TrainLoop, init_train_state
+from repro.training.steps import build_train_step
+
+
+def model_config(full: bool):
+    base = get_config("qwen2-1.5b")
+    if full:
+        # ~100M params: 12 layers, d=512, ff=2048, 32k vocab
+        return dataclasses.replace(
+            base, n_layers=12, d_model=512, n_heads=8, n_kv_heads=2,
+            head_dim=64, d_ff=2048, vocab_size=32000,
+        )
+    # CPU demo: ~5M params
+    return dataclasses.replace(
+        base, n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=2048,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    steps = args.steps or (300 if args.full else 60)
+
+    cfg = model_config(args.full)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} params={n / 1e6:.1f}M")
+
+    step = jax.jit(
+        build_train_step(
+            cfg, NULL, microbatches=2,
+            lr_fn=lambda s: cosine_schedule(s, 1e-3, 20, steps),
+        )
+    )
+    data = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=0,
+    )
+    loop = TrainLoop(
+        step, data,
+        LoopConfig(total_steps=steps, ckpt_every=max(steps // 4, 1),
+                   ckpt_dir=args.ckpt_dir),
+    )
+    t0 = time.time()
+    state, stats = loop.run(state)
+    dt = time.time() - t0
+    k = max(len(stats.losses) // 10, 1)
+    smoothed = [
+        sum(stats.losses[i: i + k]) / len(stats.losses[i: i + k])
+        for i in range(0, len(stats.losses), k)
+    ]
+    print("loss trajectory:", " -> ".join(f"{v:.3f}" for v in smoothed))
+    print(
+        f"{stats.steps_done} steps in {dt:.0f}s "
+        f"({dt / max(stats.steps_done, 1):.2f}s/step); "
+        f"restarts={stats.restarts}; checkpoints in {args.ckpt_dir}"
+    )
+    assert stats.losses[-1] < stats.losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Compiled-artifact analysis: HLO cost walking + roofline model."""
+
+from .hlo_cost import ModuleCost, analyze_module
+from .roofline import RooflineTerms, roofline_from_record, V5E
+
+__all__ = ["ModuleCost", "analyze_module", "RooflineTerms",
+           "roofline_from_record", "V5E"]

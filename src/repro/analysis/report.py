@@ -1,0 +1,120 @@
+"""Render the §Dry-run / §Roofline markdown tables from results/dryrun.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .roofline import V5E, roofline_from_record
+
+HBM_BYTES = 16 * 2 ** 30  # v5e
+
+
+def load(results_dir: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_t(x: float) -> str:
+    return f"{x * 1e3:.2f}ms" if x >= 1e-4 else f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | mem/dev | fits v5e | FLOPs/dev "
+        "| HLO bytes/dev | coll bytes/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        cell = f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        if r.get("status") == "skipped":
+            lines.append(cell + "| skip | – | – | – | – | – | – |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(cell + "| ERROR | – | – | – | – | – | – |")
+            continue
+        mem = r["memory"]["peak_bytes_est"]
+        kinds = r["collectives"]["by_kind"]
+        ks = ",".join(
+            f"{k.replace('all-', 'a').replace('reduce-scatter', 'rs')}"
+            f"×{v['count']}"
+            for k, v in sorted(kinds.items())
+        )
+        lines.append(
+            cell
+            + f"| ok | {mem / 2**30:.1f}GiB "
+            + f"| {'Y' if mem <= HBM_BYTES else 'N'} "
+            + f"| {r['cost']['flops']:.2e} | {r['cost']['bytes_accessed']:.2e} "
+            + f"| {r['collectives']['operand_bytes']:.2e} | {ks} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | T_comp | T_mem | T_coll | bottleneck | "
+        "useful (6ND/HLO) | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        rt = roofline_from_record(r)
+        # roofline fraction: model-flops-time / overlapped step bound
+        ideal = rt.model_flops_total / (r["devices"] * V5E.peak_flops)
+        frac = ideal / rt.step_time_overlapped if rt.step_time_overlapped else 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(rt.t_compute)} "
+            f"| {fmt_t(rt.t_memory)} | {fmt_t(rt.t_collective)} "
+            f"| **{rt.bottleneck}** | {rt.useful_ratio:.2f} | {frac:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs: list[dict]) -> list[tuple]:
+    """(cell, reason) candidates: worst roofline fraction, most
+    collective-bound, most paper-representative."""
+    scored = []
+    for r in recs:
+        if r.get("mesh") != "16x16" or r.get("status") != "ok":
+            continue
+        rt = roofline_from_record(r)
+        ideal = rt.model_flops_total / (r["devices"] * V5E.peak_flops)
+        frac = ideal / rt.step_time_overlapped if rt.step_time_overlapped else 0
+        coll_ratio = rt.t_collective / max(rt.step_time_overlapped, 1e-30)
+        scored.append((r, frac, coll_ratio))
+    worst = min(scored, key=lambda s: s[1] if s[1] > 0 else 1e9)
+    most_coll = max(scored, key=lambda s: s[2])
+    return [
+        (f"{worst[0]['arch']}|{worst[0]['shape']}",
+         f"worst roofline fraction {worst[1]:.3f}"),
+        (f"{most_coll[0]['arch']}|{most_coll[0]['shape']}",
+         f"most collective-bound (T_coll/T = {most_coll[2]:.2f})"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, args.mesh))
+    print("\n## Hillclimb candidates\n")
+    for cell, why in pick_hillclimb(recs):
+        print(f"- {cell}: {why}")
+
+
+if __name__ == "__main__":
+    main()

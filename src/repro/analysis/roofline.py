@@ -1,0 +1,109 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+    T_compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    T_memory     = HLO_bytes / (chips × HBM_bw)
+    T_collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from the trip-count-aware walker
+(analysis.hlo_cost) over the per-device SPMD program — so values are
+per-device already and `chips` divides only the *model-level* totals.
+collective_bytes uses the prompt convention (sum of collective operand
+sizes, loop-scaled); the ring-model bytes are reported alongside.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # bf16 FLOP/s per chip
+    hbm_bw: float          # bytes/s per chip
+    link_bw: float         # bytes/s per ICI link
+
+
+V5E = HW("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+@dataclass
+class RooflineTerms:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_total: float
+    useful_ratio: float      # MODEL_FLOPS / (HLO_FLOPs × chips)
+    bottleneck: str
+    hw: str = V5E.name
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound (the three terms fully serialized)."""
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def step_time_overlapped(self) -> float:
+        """Perfect-overlap lower bound (max of the three engines)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the overlapped bound."""
+        if self.step_time_overlapped == 0:
+            return 0.0
+        ideal = self.model_flops_total and (
+            self.model_flops_total
+            / (self.flops_per_device / max(self.t_compute, 1e-30))
+        )
+        # MFU = model_flops / (chips*peak) / step_time; chips already folded
+        return self.useful_ratio * (
+            self.t_compute / self.step_time_overlapped
+        )
+
+
+def roofline(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    model_flops_total: float,
+    chips: int,
+    hw: HW = V5E,
+) -> RooflineTerms:
+    t_c = flops_per_device / hw.peak_flops
+    t_m = bytes_per_device / hw.hbm_bw
+    t_x = collective_bytes_per_device / hw.link_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = (
+        model_flops_total / (flops_per_device * chips)
+        if flops_per_device
+        else 0.0
+    )
+    return RooflineTerms(
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        model_flops_total=model_flops_total,
+        useful_ratio=useful,
+        bottleneck=bottleneck,
+        hw=hw.name,
+    )
+
+
+def roofline_from_record(record: dict, hw: HW = V5E) -> RooflineTerms:
+    """Build terms from a dry-run JSON record (see launch/dryrun.py)."""
+    return roofline(
+        flops_per_device=record["cost"]["flops"],
+        bytes_per_device=record["cost"]["bytes_accessed"],
+        collective_bytes_per_device=record["collectives"]["operand_bytes"],
+        model_flops_total=record.get("model_flops", 0.0),
+        chips=record.get("devices", 256),
+        hw=hw,
+    )

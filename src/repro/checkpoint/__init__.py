@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic step dirs, async save, keep-k GC,
+integrity manifest, elastic (mesh-agnostic) restore."""
+
+from .manager import CheckpointManager, restore_latest, save_checkpoint
+
+__all__ = ["CheckpointManager", "restore_latest", "save_checkpoint"]

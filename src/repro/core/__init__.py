@@ -1,0 +1,29 @@
+"""Paper core: communication-optimal MTTKRP — algorithms, bounds, CP drivers.
+
+Rouse, Ballard, Knight, "Communication Lower Bounds for Matricized Tensor
+Times Khatri-Rao Product" (CS.DC 2017).
+"""
+
+from .mttkrp import mttkrp, mttkrp_naive, mttkrp_all_modes
+from .krp import khatri_rao, mttkrp_via_matmul
+from .blocked import mttkrp_blocked
+from .cp_als import cp_als, cp_gradient, CPResult
+from .dimension_tree import all_mode_mttkrp_dimtree
+from . import bounds, grid, simulator, tensor
+
+__all__ = [
+    "mttkrp",
+    "mttkrp_naive",
+    "mttkrp_all_modes",
+    "khatri_rao",
+    "mttkrp_via_matmul",
+    "mttkrp_blocked",
+    "cp_als",
+    "cp_gradient",
+    "CPResult",
+    "all_mode_mttkrp_dimtree",
+    "bounds",
+    "grid",
+    "simulator",
+    "tensor",
+]

@@ -1,0 +1,78 @@
+"""Algorithm 2 (sequential blocked MTTKRP) as a structured JAX computation.
+
+This is the host-level, jit-compatible expression of the paper's blocked
+loop order: iterate over b x ... x b tensor blocks, and for each block
+contract against the corresponding factor subvectors, accumulating into the
+output subvector. On TPU the same structure is realized by the Pallas kernel
+(``repro.kernels.mttkrp3``) with VMEM playing the role of fast memory; this
+version documents the schedule and serves as a mid-level oracle.
+
+Requires each I_k to be divisible by the block size (pad otherwise) so the
+block decomposition is a pure reshape.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .mttkrp import mttkrp
+
+_L = "abcdefghijklmnop"
+
+
+def _pad_to_multiple(x: jax.Array, block: int) -> jax.Array:
+    pads = [(0, (-d) % block) for d in x.shape]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def mttkrp_blocked(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    block: int,
+) -> jax.Array:
+    """Blocked MTTKRP with Algorithm 2's loop order, expressed as einsum.
+
+    The tensor is decomposed into blocks; block coordinates become explicit
+    contraction indices, so XLA sees exactly the blocked schedule:
+
+        B[n_blk, n_in, r] += X[blk..., in...] * prod_k A_k[k_blk, k_in, r]
+    """
+    n = x.ndim
+    dims = x.shape
+    rank = next(f.shape[1] for k, f in enumerate(factors) if k != mode)
+    xp = _pad_to_multiple(x, block)
+    # reshape to interleaved (blk, in) axes
+    newshape = []
+    for d in xp.shape:
+        newshape += [d // block, block]
+    xb = xp.reshape(newshape)
+    # einsum: tensor axes pairs (B_k, b_k); factors (B_k, b_k, z)
+    t_sub = "".join(_L[2 * k] + _L[2 * k + 1] for k in range(n))
+    f_subs, f_ops = [], []
+    for k in range(n):
+        if k == mode:
+            continue
+        fk = factors[k]
+        fp = jnp.pad(fk, ((0, (-fk.shape[0]) % block), (0, 0)))
+        f_ops.append(fp.reshape(fp.shape[0] // block, block, rank))
+        f_subs.append(_L[2 * k] + _L[2 * k + 1] + "z")
+    out_sub = _L[2 * mode] + _L[2 * mode + 1] + "z"
+    spec = ",".join([t_sub] + f_subs) + "->" + out_sub
+    out = jnp.einsum(spec, xb, *f_ops, optimize="optimal")
+    out = out.reshape(-1, rank)
+    return out[: dims[mode], :]
+
+
+def mttkrp_blocked_reference_check(
+    x: jax.Array, factors: Sequence[jax.Array], mode: int, block: int
+) -> jax.Array:
+    """abs-max discrepancy between blocked and direct MTTKRP (for tests)."""
+    a = mttkrp_blocked(x, factors, mode, block)
+    b = mttkrp(x, factors, mode)
+    return jnp.max(jnp.abs(a - b))

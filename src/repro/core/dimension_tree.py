@@ -1,0 +1,148 @@
+"""Dimension-tree multi-mode MTTKRP (paper §VII outlook; Phan et al. [13]).
+
+CP-ALS needs the MTTKRP in *every* mode each sweep. Computing them
+independently costs N separate O(N·I·R) contractions; a dimension tree
+shares partial contractions: split the mode set in half, contract the tensor
+once with each half's factors, and recurse. Asymptotically ~2 tensor-sized
+contractions per sweep instead of N, with the same communication pattern per
+contraction (each partial contraction is itself MTTKRP-like and is blocked /
+distributed by the same machinery).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_L = "abcdefghijklmnopqrstuvw"
+_RANK = "z"
+
+
+def all_mode_mttkrp_dimtree(
+    x: jax.Array, factors: Sequence[jax.Array]
+) -> list[jax.Array]:
+    """All-mode MTTKRP via a binary dimension tree.
+
+    Returns ``[B^(0), ..., B^(N-1)]`` identical (up to roundoff) to
+    ``[mttkrp(x, factors, n) for n in range(N)]`` with ~half the flops for
+    N=3,4 and asymptotically fewer for larger N.
+    """
+    n = x.ndim
+    results: Dict[int, jax.Array] = {}
+
+    def contract(node, modes, drop, has_rank):
+        sub_in = "".join(_L[m] for m in modes) + (_RANK if has_rank else "")
+        ops = [node]
+        subs = [sub_in]
+        for m in drop:
+            ops.append(factors[m])
+            subs.append(_L[m] + _RANK)
+        keep = tuple(m for m in modes if m not in drop)
+        sub_out = "".join(_L[m] for m in keep) + _RANK
+        return jnp.einsum(",".join(subs) + "->" + sub_out, *ops,
+                          optimize="optimal")
+
+    def solve(node, modes, has_rank):
+        if len(modes) == 1:
+            results[modes[0]] = node
+            return
+        half = max(1, len(modes) // 2)
+        left, right = modes[:half], modes[half:]
+        solve(contract(node, modes, right, has_rank), left, True)
+        solve(contract(node, modes, left, has_rank), right, True)
+
+    solve(x, tuple(range(n)), False)
+    return [results[m] for m in range(n)]
+
+
+def dimtree_als_sweep(
+    x: jax.Array,
+    factors: list[jax.Array],
+    update_fn,
+) -> None:
+    """One ALS sweep with dimension-tree reuse, *exactly* matching the
+    Gauss-Seidel order of plain ALS.
+
+    ``update_fn(mode, b)`` receives the MTTKRP result for ``mode`` computed
+    with all modes < mode already updated, must return the new factor, and
+    may maintain its own side state (grams, weights). ``factors`` is updated
+    in place. Key ordering property: a node's partial for its *left* child is
+    contracted with right-child factors (not yet updated — correct), and the
+    partial for its *right* child is contracted with left-child factors
+    *after* they were updated — so every leaf sees exactly the factors plain
+    ALS would use, while sharing the upper-tree contractions.
+    """
+
+    def contract(node, modes, drop, has_rank):
+        sub_in = "".join(_L[m] for m in modes) + (_RANK if has_rank else "")
+        ops, subs = [node], [sub_in]
+        for m in drop:
+            ops.append(factors[m])
+            subs.append(_L[m] + _RANK)
+        keep = tuple(m for m in modes if m not in drop)
+        sub_out = "".join(_L[m] for m in keep) + _RANK
+        return jnp.einsum(",".join(subs) + "->" + sub_out, *ops,
+                          optimize="optimal")
+
+    def solve(node, modes, has_rank):
+        if len(modes) == 1:
+            mode = modes[0]
+            factors[mode] = update_fn(mode, node)
+            return
+        half = max(1, len(modes) // 2)
+        left, right = modes[:half], modes[half:]
+        solve(contract(node, modes, right, has_rank), left, True)
+        solve(contract(node, modes, left, has_rank), right, True)
+
+    solve(x, tuple(range(x.ndim)), False)
+
+
+def dimtree_flops(dims: Sequence[int], rank: int) -> int:
+    """Modeled multiply-add count of one dimension-tree sweep.
+
+    Each contract-away of modes D from a node of volume V (pairing the
+    factors one at a time, rank-R throughout) costs sum of intermediate
+    volumes; we count the dominant first-step term V*R per dropped factor
+    applied to the shrinking node. Compare against naive all-mode MTTKRP:
+    N * (N-1) * I * R multiply-adds.
+    """
+    total = 0
+
+    def contract_cost(sizes: tuple[int, ...], drop_count: int, has_rank: bool) -> int:
+        cost = 0
+        vol = 1
+        for s in sizes:
+            vol *= s
+        # drop factors one at a time; node volume shrinks after each
+        for _ in range(drop_count):
+            cost += vol * rank
+            # dropping one mode divides volume by that mode's size; use the
+            # geometric mean as the model (exact per-order cost is computed
+            # by XLA; this model is for the reuse ratio benchmark)
+            vol = int(vol ** ((len(sizes) - 1) / len(sizes))) if len(sizes) > 1 else vol
+        return cost
+
+    def rec(sizes: tuple[int, ...], has_rank: bool):
+        nonlocal total
+        if len(sizes) == 1:
+            return
+        half = max(1, len(sizes) // 2)
+        left, right = sizes[:half], sizes[half:]
+        total += contract_cost(sizes, len(right), has_rank)
+        total += contract_cost(sizes, len(left), has_rank)
+        rec(left, True)
+        rec(right, True)
+
+    rec(tuple(dims), False)
+    return total
+
+
+def naive_all_mode_flops(dims: Sequence[int], rank: int) -> int:
+    """N independent MTTKRPs, each N-1 pairwise contractions of I*R."""
+    n = len(dims)
+    vol = 1
+    for d in dims:
+        vol *= d
+    return n * (n - 1) * vol * rank

@@ -1,0 +1,57 @@
+"""Khatri-Rao product and the MTTKRP-via-matrix-multiplication baseline.
+
+The paper (§III-B, §VI) compares its communication-optimal algorithms against
+the straightforward approach: matricize the tensor, form the Khatri-Rao
+product (KRP) of the non-target factors explicitly, and multiply:
+
+    B^(n) = X_(n) @ krp({A^(k)}_{k != n})        # (I_n, I/I_n) @ (I/I_n, R)
+
+This file implements that baseline faithfully (it is the thing the paper's
+algorithms beat) plus its communication-cost model for the comparison
+benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .tensor import matricize
+
+
+def khatri_rao(matrices: Sequence[jax.Array]) -> jax.Array:
+    """Column-wise Khatri-Rao product.
+
+    ``matrices[k]`` has shape ``(I_k, R)``; result has shape ``(prod I_k, R)``
+    with the *first* matrix's index varying fastest (matching the
+    :func:`repro.core.tensor.matricize` column convention, so that
+    ``matricize(X, n) @ khatri_rao([A_k for k != n])`` equals the MTTKRP).
+    """
+    if len(matrices) == 0:
+        raise ValueError("need at least one matrix")
+    rank = matrices[0].shape[1]
+    for m in matrices:
+        if m.shape[1] != rank:
+            raise ValueError("rank mismatch in khatri_rao")
+    # Build with the first matrix fastest: accumulate right-to-left.
+    out = matrices[-1]
+    for m in reversed(matrices[:-1]):
+        # out: (J, R), m: (I, R) -> (J*I, R) with m's index fastest.
+        out = (out[:, None, :] * m[None, :, :]).reshape(-1, rank)
+    return out
+
+
+def mttkrp_via_matmul(
+    x: jax.Array, factors: Sequence[jax.Array], mode: int
+) -> jax.Array:
+    """The explicit-KRP matmul baseline (paper §III-B).
+
+    Communication-inefficient at scale because the KRP matrix is treated as a
+    general (I/I_n, R) matrix although it has only sum_{k != n} I_k * R
+    degrees of freedom.
+    """
+    xm = matricize(x, mode)
+    k = khatri_rao([f for i, f in enumerate(factors) if i != mode])
+    return xm @ k

@@ -1,0 +1,118 @@
+"""Dense tensor utilities shared by the MTTKRP/CP core.
+
+Conventions
+-----------
+* An ``N``-way tensor is a ``jnp.ndarray`` of shape ``(I_1, ..., I_N)``.
+* Factor matrices ``A^(k)`` have shape ``(I_k, R)``.
+* ``mode`` indices are 0-based throughout the code (the paper is 1-based).
+* Matricization ``X_(n)`` follows the Kolda/Bader convention: the mode-``n``
+  fibers become columns, with the remaining modes ordered
+  ``(0, ..., n-1, n+1, ..., N-1)`` varying fastest-to-slowest in
+  *column-major (Fortran) order* over the remaining axes, i.e.
+  ``X_(n)[i_n, j]`` with ``j = sum_{k != n} i_k * prod_{m<k, m != n} I_m``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import reduce
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matricize(x: jax.Array, mode: int) -> jax.Array:
+    """Mode-``mode`` matricization ``X_(n)`` of shape ``(I_n, I/I_n)``.
+
+    Uses the Kolda/Bader column ordering (remaining modes vary with the
+    earliest mode fastest).
+    """
+    n = x.ndim
+    if not 0 <= mode < n:
+        raise ValueError(f"mode {mode} out of range for {n}-way tensor")
+    # Move `mode` to the front; remaining axes keep their relative order.
+    perm = (mode,) + tuple(k for k in range(n) if k != mode)
+    xt = jnp.transpose(x, perm)
+    # Fortran ordering over the trailing axes == reverse axes then C-ravel.
+    xt = jnp.transpose(
+        xt, (0,) + tuple(range(n - 1, 0, -1))
+    )
+    return xt.reshape(x.shape[mode], -1)
+
+
+def dematricize(xm: jax.Array, mode: int, shape: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`matricize`."""
+    shape = tuple(shape)
+    n = len(shape)
+    rest = tuple(k for k in range(n) if k != mode)
+    # matricize produced axes (mode, reversed(rest))
+    inter = (shape[mode],) + tuple(shape[k] for k in reversed(rest))
+    xt = xm.reshape(inter)
+    xt = jnp.transpose(xt, (0,) + tuple(range(n - 1, 0, -1)))
+    # now axes are (mode,) + rest ; invert the original permutation
+    perm = (mode,) + rest
+    inv = [0] * n
+    for pos, axis in enumerate(perm):
+        inv[axis] = pos
+    return jnp.transpose(xt, inv)
+
+
+def tensor_from_factors(factors: Sequence[jax.Array]) -> jax.Array:
+    """Reconstruct the full tensor from CP factors: sum of rank-1 outer products.
+
+    ``factors[k]`` has shape ``(I_k, R)``; result has shape ``(I_1, ..., I_N)``.
+    """
+    n = len(factors)
+    if n < 2:
+        raise ValueError("need at least 2 factors")
+    subs = []
+    letters = "abcdefghijklmnopqrstuvw"
+    for k in range(n):
+        subs.append(f"{letters[k]}z")
+    spec = ",".join(subs) + "->" + letters[:n]
+    return jnp.einsum(spec, *factors)
+
+
+def frob_norm(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def relative_error(x: jax.Array, y: jax.Array) -> jax.Array:
+    return frob_norm(x - y) / jnp.maximum(frob_norm(x), 1e-30)
+
+
+def total_size(dims: Sequence[int]) -> int:
+    """I = prod(I_k)."""
+    return int(reduce(lambda a, b: a * b, dims, 1))
+
+
+def random_tensor(key: jax.Array, dims: Sequence[int], dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, tuple(dims), dtype=dtype)
+
+
+def random_factors(
+    key: jax.Array, dims: Sequence[int], rank: int, dtype=jnp.float32
+) -> list[jax.Array]:
+    keys = jax.random.split(key, len(dims))
+    return [
+        jax.random.normal(k, (d, rank), dtype=dtype) / math.sqrt(rank)
+        for k, d in zip(keys, dims)
+    ]
+
+
+def random_low_rank_tensor(
+    key: jax.Array, dims: Sequence[int], rank: int, dtype=jnp.float32
+) -> tuple[jax.Array, list[jax.Array]]:
+    """An exactly rank-``rank`` tensor together with its generating factors."""
+    factors = random_factors(key, dims, rank, dtype)
+    return tensor_from_factors(factors), factors
+
+
+def np_matricize(x: np.ndarray, mode: int) -> np.ndarray:
+    """NumPy twin of :func:`matricize` (used by the sequential simulator)."""
+    n = x.ndim
+    perm = (mode,) + tuple(k for k in range(n) if k != mode)
+    xt = np.transpose(x, perm)
+    return xt.reshape(x.shape[mode], -1, order="F")

@@ -1,0 +1,12 @@
+"""Data pipeline: deterministic, counter-indexed synthetic token streams.
+
+Every batch is a pure function of (seed, step) — exactly resumable after
+restart and re-shardable to any DP width (the global batch is generated
+logically and each host/device slice is a view), which is what elastic
+restarts need. A real deployment swaps `synthetic_batch` for a tokenized
+shard reader with the same (seed, step) -> global batch contract.
+"""
+
+from .pipeline import DataConfig, batch_iterator, synthetic_batch
+
+__all__ = ["DataConfig", "batch_iterator", "synthetic_batch"]

@@ -1,0 +1,66 @@
+"""Counter-indexed synthetic LM data (see package docstring).
+
+The "corpus" is a fixed random Markov-ish token process: token t+1 depends
+on token t through a seeded hash — giving the model actual structure to
+learn (bigram statistics) so example training runs show decreasing loss,
+while remaining fully deterministic and storage-free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: float = 0.8  # probability a token follows the bigram chain
+
+
+def _bigram_table(vocab: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(vocab,), dtype=np.int32)
+
+
+def synthetic_batch(cfg: DataConfig, step: int) -> dict:
+    """Global batch for `step` (pure function of (cfg.seed, step))."""
+    key = jax.random.PRNGKey(cfg.seed)
+    key = jax.random.fold_in(key, step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    table = jnp.asarray(_bigram_table(v, cfg.seed))
+    start = jax.random.randint(k1, (b,), 0, v)
+    noise = jax.random.randint(k2, (b, s), 0, v)
+    use_chain = jax.random.bernoulli(k3, cfg.structure, (b, s))
+
+    def step_fn(tok, inp):
+        nz, uc = inp
+        nxt = jnp.where(uc, table[tok], nz)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(
+        step_fn, start, (noise.T, use_chain.T)
+    )
+    tokens = toks.T  # (B, S)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], tokens[:, :1]], axis=1
+    )  # next-token targets (wrap at end)
+    return {"tokens": tokens, "labels": labels}
+
+
+def batch_iterator(
+    cfg: DataConfig, start_step: int = 0
+) -> Iterator[tuple[int, dict]]:
+    """Resumable iterator: pass the restored step after a restart."""
+    step = start_step
+    while True:
+        yield step, synthetic_batch(cfg, step)
+        step += 1

@@ -1,0 +1,27 @@
+"""Distributed runtime: parallel MTTKRP algorithms, grids, HLO analysis."""
+
+from .mesh import make_grid_mesh, mode_axis, hyperslice_axes
+from .mttkrp_parallel import (
+    mttkrp_stationary,
+    mttkrp_general,
+    place_inputs,
+    tensor_spec,
+    factor_spec,
+    output_spec,
+)
+from .hlo import parse_collectives, collective_bytes, CollectiveSummary
+
+__all__ = [
+    "make_grid_mesh",
+    "mode_axis",
+    "hyperslice_axes",
+    "mttkrp_stationary",
+    "mttkrp_general",
+    "place_inputs",
+    "tensor_spec",
+    "factor_spec",
+    "output_spec",
+    "parse_collectives",
+    "collective_bytes",
+    "CollectiveSummary",
+]

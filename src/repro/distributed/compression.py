@@ -1,0 +1,157 @@
+"""CP gradient compression — the paper's insight as a DP-communication trick.
+
+The Khatri-Rao structure means a rank-R CP representation of an
+I_1×...×I_N gradient carries Σ_k I_k·R words instead of Π_k I_k. In data
+parallelism we must average gradients across workers; instead of
+all-reducing the full gradient we run a few *synchronized* CP-ALS sweeps in
+which only the MTTKRP results are all-reduced:
+
+    B_n = pmean(MTTKRP(g_local, factors, n))      # I_n × R words
+    A_n = B_n · Γ_n^+                              # local solve
+
+MTTKRP is linear in the tensor, so pmean(MTTKRP(g_local)) =
+MTTKRP(mean g) — every worker performs *exactly* CP-ALS on the averaged
+gradient while communicating only factor-sized data. Per sweep the volume is
+Σ_k I_k R vs Π_k I_k for a full all-reduce (e.g. a 4096×14336 matrix at
+rank 8: 147k vs 59M words, ~400×).
+
+Error feedback (PowerSGD-style) accumulates the compression residual into
+the next step's gradient so the optimizer sees an unbiased long-run signal.
+
+Deterministic same-key initialization keeps workers in lockstep without a
+broadcast.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.mttkrp import mttkrp
+from ..core.tensor import tensor_from_factors
+
+
+def pick_3way_shape(shape: Sequence[int]) -> tuple[int, int, int]:
+    """Map a parameter shape to the 3-way tensor the compressor works on.
+
+    Matrices become (d0, d1, 1) (CP == low-rank matrix factorization);
+    higher-order tensors merge trailing dims; vectors are not compressed
+    (callers should skip 1-D params — compression would save nothing).
+    """
+    dims = [int(d) for d in shape]
+    if len(dims) == 1:
+        return (dims[0], 1, 1)
+    if len(dims) == 2:
+        return (dims[0], dims[1], 1)
+    if len(dims) == 3:
+        return (dims[0], dims[1], dims[2])
+    merged = 1
+    for d in dims[2:]:
+        merged *= d
+    return (dims[0], dims[1], merged)
+
+
+def init_factors(key: jax.Array, dims: Sequence[int], rank: int,
+                 dtype=jnp.float32) -> list[jax.Array]:
+    ks = jax.random.split(key, len(dims))
+    return [
+        jax.random.normal(k, (d, rank), dtype) / jnp.sqrt(rank)
+        for k, d in zip(ks, dims)
+    ]
+
+
+def _solve_mode(b: jax.Array, grams: list[jax.Array], mode: int,
+                rank: int) -> jax.Array:
+    gamma = jnp.ones((rank, rank), b.dtype)
+    for k, g in enumerate(grams):
+        if k != mode:
+            gamma = gamma * g
+    ridge = 1e-6 * jnp.trace(gamma) / rank + 1e-12
+    return jnp.linalg.solve(
+        gamma + ridge * jnp.eye(rank, dtype=b.dtype), b.T
+    ).T
+
+
+def cp_compressed_mean(
+    g_local: jax.Array,
+    axis_names,
+    rank: int,
+    sweeps: int = 2,
+    key: jax.Array | None = None,
+    factors: Sequence[jax.Array] | None = None,
+):
+    """Inside shard_map/pmap: rank-R CP-ALS of pmean(g) with factor-only
+    communication. Returns (reconstruction, factors).
+
+    ``g_local`` must be >= 2-D (reshape first via pick_3way_shape).
+    """
+    dims = g_local.shape
+    if factors is None:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        factors = init_factors(key, dims, rank, g_local.dtype)
+    else:
+        factors = list(factors)
+        rank = factors[0].shape[1]
+    grams = [f.T @ f for f in factors]
+    for _ in range(sweeps):
+        for mode in range(len(dims)):
+            b_loc = mttkrp(g_local, factors, mode)
+            # the ONLY cross-worker communication: I_mode x R words
+            b = jax.lax.pmean(b_loc, axis_names)
+            a = _solve_mode(b, grams, mode, rank)
+            factors[mode] = a
+            grams[mode] = a.T @ a
+    return tensor_from_factors(factors), factors
+
+
+@dataclass
+class CompressionState:
+    """Error-feedback state per compressed parameter."""
+    residual: jax.Array
+    factors: list[jax.Array]
+
+
+def init_compression_state(
+    key: jax.Array, shape: Sequence[int], rank: int, dtype=jnp.float32
+) -> CompressionState:
+    dims = pick_3way_shape(shape)
+    return CompressionState(
+        residual=jnp.zeros(dims, dtype),
+        factors=init_factors(key, dims, rank, dtype),
+    )
+
+
+def compressed_gradient(
+    g_local: jax.Array,
+    state: CompressionState,
+    axis_names,
+    sweeps: int = 1,
+) -> tuple[jax.Array, CompressionState]:
+    """Error-fed compressed DP gradient (call inside shard_map over DP axes).
+
+    Returns the approximated *mean* gradient (original shape) and the new
+    state. Warm-started factors make one sweep per step sufficient in
+    practice (the gradient subspace drifts slowly).
+    """
+    dims = pick_3way_shape(g_local.shape)
+    g3 = g_local.reshape(dims) + state.residual
+    recon, factors = cp_compressed_mean(
+        g3, axis_names, rank=state.factors[0].shape[1],
+        sweeps=sweeps, factors=state.factors,
+    )
+    new_state = CompressionState(residual=g3 - recon, factors=factors)
+    return recon.reshape(g_local.shape), new_state
+
+
+def compression_ratio(shape: Sequence[int], rank: int, sweeps: int) -> float:
+    """Words all-reduced with compression vs full all-reduce (per step)."""
+    dims = pick_3way_shape(shape)
+    full = 1
+    for d in dims:
+        full *= d
+    factor_words = sweeps * sum(d * rank for d in dims)
+    return full / max(factor_words, 1)

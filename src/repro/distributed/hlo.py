@@ -1,0 +1,159 @@
+"""Compiled-HLO collective parser.
+
+Extracts every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute) from ``compiled.as_text()`` and accounts
+bytes two ways:
+
+* ``operand_bytes`` — sum of operand sizes (the roofline-term convention);
+* ``ring_bytes``    — per-device link traffic under ring/bucket algorithms
+                      (the paper's §V-C3 model): all-gather (q-1)·w_in,
+                      reduce-scatter (q-1)·w_out, all-reduce 2(q-1)/q·w,
+                      all-to-all (q-1)/q·w, collective-permute w.
+
+SPMD HLO is a per-device program, so operand shapes are per-device shards —
+exactly the paper's "w = max_p nnz" local sizes.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string (possibly a tuple)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    name: str
+    operand_bytes: int
+    output_bytes: int
+    group_size: int
+
+    @property
+    def ring_bytes(self) -> int:
+        q = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            return (q - 1) * self.operand_bytes
+        if self.kind == "reduce-scatter":
+            return (q - 1) * self.output_bytes
+        if self.kind == "all-reduce":
+            return int(2 * (q - 1) / q * self.operand_bytes)
+        if self.kind == "all-to-all":
+            return int((q - 1) / q * self.operand_bytes)
+        return self.operand_bytes  # collective-permute: one hop
+
+
+@dataclass
+class CollectiveSummary:
+    ops: list[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def operand_bytes(self) -> int:
+        return sum(o.operand_bytes for o in self.ops)
+
+    @property
+    def ring_bytes(self) -> int:
+        return sum(o.ring_bytes for o in self.ops)
+
+    def by_kind(self) -> dict[str, dict]:
+        out: dict[str, dict] = {}
+        for o in self.ops:
+            d = out.setdefault(o.kind, {"count": 0, "operand_bytes": 0,
+                                        "ring_bytes": 0})
+            d["count"] += 1
+            d["operand_bytes"] += o.operand_bytes
+            d["ring_bytes"] += o.ring_bytes
+        return out
+
+
+def parse_collectives(hlo_text: str) -> CollectiveSummary:
+    """Parse collective ops out of (stable-)HLO module text.
+
+    Handles sync and async (``-start``/``-done`` — only starts counted),
+    brace and iota replica-group formats, tuple shapes, and resolves operand
+    sizes through the instruction table.
+    """
+    sizes: dict[str, int] = {}
+    summary = CollectiveSummary()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, opcode, rest = m.groups()
+        sizes[name] = _shape_bytes(out_shape)
+        base = opcode
+        is_start = False
+        if base.endswith("-start"):
+            base, is_start = base[:-6], True
+        elif base.endswith("-done"):
+            continue  # counted at -start
+        if base not in COLLECTIVE_KINDS:
+            continue
+        # resolve operand sizes from %references on the line
+        operand_names = re.findall(r"%([\w\.\-]+)", rest.split("),")[0])
+        operand_bytes = sum(sizes.get(n, 0) for n in operand_names)
+        if operand_bytes == 0:
+            # operands printed with inline shapes (unoptimized HLO)
+            operand_bytes = _shape_bytes(rest.split(")")[0])
+        # group size
+        q = 1
+        mg = _GROUPS_BRACE_RE.search(line)
+        if mg:
+            q = len(mg.group(1).split(","))
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                q = int(mi.group(2))
+            elif base == "collective-permute":
+                q = 2
+        out_bytes = sizes[name]
+        if is_start and out_bytes == 0:
+            out_bytes = operand_bytes
+        summary.ops.append(
+            CollectiveOp(base, name, operand_bytes, out_bytes, q)
+        )
+    return summary
+
+
+def collective_bytes(compiled_or_text) -> int:
+    """Prompt-convention collective bytes: sum of operand sizes."""
+    text = (
+        compiled_or_text
+        if isinstance(compiled_or_text, str)
+        else compiled_or_text.as_text()
+    )
+    return parse_collectives(text).operand_bytes

@@ -1,0 +1,47 @@
+"""Logical processor grids for the parallel MTTKRP algorithms.
+
+The paper organizes P processors as an N-way grid (Alg 3) or (N+1)-way grid
+with a leading rank axis P_0 (Alg 4). Mode-k axes are named ``m0..m{N-1}``;
+the rank axis is ``r``. A mode-k *hyperslice* (the paper's
+``procs(:, ..., :, p_k, :, ..., :)``) is the set of all axes except ``m{k}``
+(and except ``r`` for Alg 4 — factor gathers never cross the rank axis).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import AxisType
+
+
+def mode_axis(k: int) -> str:
+    return f"m{k}"
+
+
+def make_grid_mesh(grid: Sequence[int], p0: int = 1) -> jax.sharding.Mesh:
+    """Mesh for Alg 3 (p0=1) or Alg 4 (p0>1): axes ('r',) m0, ..., m{N-1}."""
+    shape = tuple(grid) if p0 == 1 else (p0,) + tuple(grid)
+    names = tuple(mode_axis(k) for k in range(len(grid)))
+    if p0 != 1:
+        names = ("r",) + names
+    return jax.make_mesh(
+        shape, names, axis_types=(AxisType.Auto,) * len(names)
+    )
+
+
+def hyperslice_axes(ndim: int, k: int, with_rank_axis: bool = False) -> tuple[str, ...]:
+    """Axes of the mode-k hyperslice: every mode axis except m{k}.
+
+    The gather/reduce-scatter collectives of Alg 3/4 run over these axes;
+    the rank axis never participates (factors are partitioned, not
+    replicated, along r).
+    """
+    del with_rank_axis  # rank axis never included, by construction
+    return tuple(mode_axis(j) for j in range(ndim) if j != k)
+
+
+def row_sharding_axes(ndim: int, k: int) -> tuple[str, ...]:
+    """PartitionSpec axes for factor k's rows: split by m{k} first (the
+    paper's S^{(k)}_{p_k} block-rows), then spread across the hyperslice."""
+    return (mode_axis(k),) + hyperslice_axes(ndim, k)

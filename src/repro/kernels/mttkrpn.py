@@ -1,0 +1,121 @@
+"""Generic N-way Pallas MTTKRP kernel (N >= 3) — same schedule as mttkrp3.
+
+The grid is (r, i, c_1, ..., c_{N-1}) with the contraction tiles innermost:
+the output tile O(bi, br) stays VMEM-resident across the whole contraction
+sweep (output-stationary, Algorithm 2's reuse), the tensor is streamed once
+per r-tile, and the rank-structured weight block
+
+    W[(c_1..c_{N-1}), r] = Π_k A_k(c_k, r)
+
+is built in VMEM by chained broadcasts (the Khatri-Rao structure — never
+materialized in HBM). See mttkrp3.py for the full TPU-adaptation rationale;
+this module generalizes it to arbitrary order for 4-/5-way tensors.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _compiler_params(n_contract: int):
+        sem = ("parallel", "parallel") + ("arbitrary",) * n_contract
+        if hasattr(pltpu, "CompilerParams"):
+            return pltpu.CompilerParams(dimension_semantics=sem)
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)  # pragma: no cover
+except Exception:  # pragma: no cover
+    def _compiler_params(n_contract: int):
+        return None
+
+
+def _kernel(*refs, n_contract: int, acc_dtype):
+    x_ref = refs[0]
+    f_refs = refs[1 : 1 + n_contract]
+    o_ref = refs[1 + n_contract]
+
+    first_contract_step = pl.program_id(2) == 0
+    for d in range(1, n_contract):
+        first_contract_step &= pl.program_id(2 + d) == 0
+
+    @pl.when(first_contract_step)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    br = f_refs[0].shape[1]
+    # chained outer product over the contraction tile dims
+    w = f_refs[0][...].astype(acc_dtype)  # (b1, br)
+    for f in f_refs[1:]:
+        ft = f[...].astype(acc_dtype)  # (bd, br)
+        w = (w[:, None, :] * ft[None, :, :]).reshape(-1, br)
+    bi = x_ref.shape[0]
+    xm = x_ref[...].reshape(bi, -1)
+    o_ref[...] += jax.lax.dot_general(
+        xm, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+
+
+def mttkrpn_pallas(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    *,
+    block_i: int,
+    block_contract: Sequence[int],
+    block_r: int,
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Canonical mode-0 N-way MTTKRP. ``factors`` are the N-1 non-output
+    factors in tensor-axis order (axes 1..N-1). Pre-padded inputs required."""
+    n = x.ndim
+    nc = n - 1
+    assert len(factors) == nc and len(block_contract) == nc
+    i_sz = x.shape[0]
+    r_sz = factors[0].shape[1]
+    for d, f in enumerate(factors):
+        assert f.shape == (x.shape[1 + d], r_sz)
+        assert x.shape[1 + d] % block_contract[d] == 0
+    assert i_sz % block_i == 0 and r_sz % block_r == 0
+
+    grid = (
+        r_sz // block_r,
+        i_sz // block_i,
+    ) + tuple(x.shape[1 + d] // block_contract[d] for d in range(nc))
+
+    def x_map(r, i, *cs):
+        return (i,) + cs
+
+    def f_map_for(d):
+        def f_map(r, i, *cs):
+            return (cs[d], r)
+        return f_map
+
+    def o_map(r, i, *cs):
+        return (i, r)
+
+    in_specs = [
+        pl.BlockSpec((block_i,) + tuple(block_contract), x_map)
+    ] + [
+        pl.BlockSpec((block_contract[d], block_r), f_map_for(d))
+        for d in range(nc)
+    ]
+    kernel = functools.partial(_kernel, n_contract=nc, acc_dtype=acc_dtype)
+    kwargs = {}
+    cp = _compiler_params(nc)
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_i, block_r), o_map),
+        out_shape=jax.ShapeDtypeStruct((i_sz, r_sz), acc_dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, *factors)

@@ -1,0 +1,210 @@
+"""jit'd public wrappers for the Pallas MTTKRP kernels.
+
+Handles: mode canonicalization (transpose output mode to axis 0), TPU-
+alignment padding, VMEM-budget block-size selection (the Eq-9 analogue
+``working_set(blocks) <= VMEM``), kernel dispatch (3-way specialized /
+N-way generic), un-padding, and dtype policy (f32 accumulation).
+
+``interpret=None`` auto-selects: real Mosaic lowering on TPU backends,
+interpret mode elsewhere (this container validates on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .mttkrp3 import mttkrp3_pallas
+from .mttkrpn import mttkrpn_pallas
+
+LANE = 128
+SUBLANE = 8
+VMEM_BYTES = 16 * 2 ** 20  # v5e per-core VMEM
+VMEM_BUDGET = VMEM_BYTES // 2  # leave headroom for double-buffering
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    block_i: int
+    block_contract: tuple[int, ...]
+    block_r: int
+
+    def working_set_words(self, itemsize: int = 4) -> int:
+        """VMEM words held per grid step (Eq 9 analogue): X tile + factor
+        tiles + KRP block + output tile."""
+        prod_c = math.prod(self.block_contract)
+        x_tile = self.block_i * prod_c
+        f_tiles = sum(c * self.block_r for c in self.block_contract)
+        krp = prod_c * self.block_r
+        out = self.block_i * self.block_r
+        return x_tile + f_tiles + krp + out
+
+
+def choose_blocks(
+    shape: Sequence[int],
+    rank: int,
+    itemsize: int = 4,
+    vmem_budget: int = VMEM_BUDGET,
+) -> BlockPlan:
+    """Pick TPU-aligned block sizes fitting the VMEM budget.
+
+    Strategy (mirrors the paper's b ≈ (αM)^{1/N} with TPU alignment): output
+    mode and rank tiles start at MXU-friendly 128; the minor contraction dim
+    at 128 (lane), other contraction dims at 8 (sublane); then shrink the
+    largest contributor until the working set fits.
+    """
+    n = len(shape)
+    bi = min(_round_up(shape[0], SUBLANE), 128)
+    br = min(_round_up(rank, LANE), 512)
+    bc = []
+    for d in range(1, n):
+        if d == n - 1:  # minor dim: lane-aligned
+            bc.append(min(_round_up(shape[d], LANE), 128))
+        else:
+            bc.append(min(_round_up(shape[d], SUBLANE), 8))
+    plan = BlockPlan(bi, tuple(bc), br)
+    # shrink until it fits (keep alignment floors)
+    while plan.working_set_words() * itemsize > vmem_budget:
+        if plan.block_r > LANE:
+            plan = BlockPlan(plan.block_i, plan.block_contract, plan.block_r // 2)
+        elif plan.block_i > SUBLANE:
+            plan = BlockPlan(plan.block_i // 2, plan.block_contract, plan.block_r)
+        else:
+            bc = list(plan.block_contract)
+            grew = False
+            for d in range(len(bc) - 1):  # shrink non-minor contraction dims
+                if bc[d] > SUBLANE:
+                    bc[d] //= 2
+                    grew = True
+                    break
+            if not grew:
+                if bc and bc[-1] > LANE:
+                    bc[-1] //= 2
+                else:
+                    break  # minimal plan; accept
+            plan = BlockPlan(plan.block_i, tuple(bc), plan.block_r)
+    return plan
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mttkrp_pallas(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    interpret: bool | None = None,
+    plan: BlockPlan | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """MTTKRP for any mode via the Pallas blocked kernel.
+
+    Drop-in for :func:`repro.core.mttkrp.mttkrp` (f32 accumulation). The
+    tensor is transposed so ``mode`` is axis 0; inputs are zero-padded to
+    block multiples (zero tensor padding contributes nothing; padded output
+    rows are sliced away).
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    n = x.ndim
+    if n < 3:
+        raise ValueError("pallas kernel supports N >= 3 (use core.mttkrp)")
+    perm = (mode,) + tuple(k for k in range(n) if k != mode)
+    xp = jnp.transpose(x, perm)
+    fs = [factors[k] for k in perm[1:]]
+    rank = fs[0].shape[1]
+    out_rows = x.shape[mode]
+
+    if plan is None:
+        plan = choose_blocks(xp.shape, rank, x.dtype.itemsize)
+    # pad to block multiples
+    tgt = [_round_up(xp.shape[0], plan.block_i)] + [
+        _round_up(xp.shape[1 + d], plan.block_contract[d])
+        for d in range(n - 1)
+    ]
+    r_pad = _round_up(rank, plan.block_r)
+    xp = jnp.pad(xp, [(0, t - s) for t, s in zip(tgt, xp.shape)])
+    fs = [
+        jnp.pad(f, ((0, tgt[1 + d] - f.shape[0]), (0, r_pad - rank)))
+        for d, f in enumerate(fs)
+    ]
+    if n == 3:
+        out = mttkrp3_pallas(
+            xp, fs[0], fs[1],
+            block_i=plan.block_i,
+            block_j=plan.block_contract[0],
+            block_k=plan.block_contract[1],
+            block_r=plan.block_r,
+            interpret=interpret,
+        )
+    else:
+        out = mttkrpn_pallas(
+            xp, fs,
+            block_i=plan.block_i,
+            block_contract=plan.block_contract,
+            block_r=plan.block_r,
+            interpret=interpret,
+        )
+    out = out[:out_rows, :rank]
+    return out.astype(out_dtype or x.dtype)
+
+
+def mttkrp_traffic_model(
+    shape: Sequence[int], rank: int, plan: BlockPlan, itemsize: int = 4
+) -> dict:
+    """Modeled HBM<->VMEM traffic of the kernel (bytes), mirroring the
+    BlockSpec fetch rules: a block is re-fetched when its mapped index
+    changes between consecutive grid steps.
+
+    Grid (3-way): (i, r, j, k), k innermost. X fetched every step; factor k
+    every step; factor j once per k-sweep; O written once per (i, r).
+    """
+    n = len(shape)
+    padded = [_round_up(shape[0], plan.block_i)] + [
+        _round_up(shape[1 + d], plan.block_contract[d]) for d in range(n - 1)
+    ]
+    r_pad = _round_up(rank, plan.block_r)
+    gi = padded[0] // plan.block_i
+    gr = r_pad // plan.block_r
+    gc = [padded[1 + d] // plan.block_contract[d] for d in range(n - 1)]
+    steps = gi * gr * math.prod(gc)
+    x_bytes = steps * plan.block_i * math.prod(plan.block_contract) * itemsize
+    f_bytes = 0
+    # factor d re-fetched when (c_d, r) changes; c_d sweeps with all inner
+    # dims constant-free: fetches = gi*gr*prod(gc[:d+1])
+    run = gi * gr
+    for d in range(n - 1):
+        run *= gc[d]
+        f_bytes += run * plan.block_contract[d] * plan.block_r * itemsize
+    o_bytes = gi * gr * plan.block_i * plan.block_r * itemsize
+    total = x_bytes + f_bytes + o_bytes
+    # the paper's ideal (Eq 10-style, words -> bytes)
+    i_total = math.prod(shape)
+    ideal = (i_total + math.prod(
+        math.ceil(shape[d] / ([plan.block_i] + list(plan.block_contract))[d])
+        for d in range(n)
+    ) * rank * (n + 1) * max([plan.block_i] + list(plan.block_contract))) * itemsize
+    return {
+        "x_bytes": x_bytes,
+        "factor_bytes": f_bytes,
+        "out_bytes": o_bytes,
+        "total_bytes": total,
+        "eq10_bytes": ideal,
+        "steps": steps,
+        "working_set_bytes": plan.working_set_words() * itemsize,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def mttkrp_pallas_jit(x, factors, mode: int, interpret: bool | None = None):
+    return mttkrp_pallas(x, tuple(factors), mode, interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas MTTKRP kernels."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+_L = "abcdefghijklmnop"
+
+
+def mttkrp_ref(
+    x: jax.Array, factors: Sequence[jax.Array], mode: int
+) -> jax.Array:
+    """Reference MTTKRP: single einsum in f32 accumulation.
+
+    ``factors`` has N entries; ``factors[mode]`` is ignored. Output is f32
+    (the kernels accumulate in f32 regardless of input dtype).
+    """
+    n = x.ndim
+    ins = [f.astype(jnp.float32) for k, f in enumerate(factors) if k != mode]
+    spec = (
+        _L[:n]
+        + ","
+        + ",".join(f"{_L[k]}z" for k in range(n) if k != mode)
+        + f"->{_L[mode]}z"
+    )
+    return jnp.einsum(spec, x.astype(jnp.float32), *ins, optimize="optimal")
+
+
+def mttkrp3_ref(
+    x: jax.Array, a: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Canonical mode-0 3-way oracle: O(i,r) = sum_jk X(i,j,k) A(j,r) B(k,r)."""
+    return mttkrp_ref(x, [None, a, b], 0)

@@ -1,0 +1,128 @@
+"""Pallas kernel: fused intra-chunk SSD contraction (Mamba2).
+
+§Perf Cell B (EXPERIMENTS.md) showed the einsum-SSD is memory-bound because
+XLA materializes the (B, nc, q, q, H) decay-weighted score chain in HBM for
+every layer × microbatch. This kernel is the scoped fix — the same blocking
+discipline as the mttkrp3 kernel (Algorithm 2's "form the structured factor
+in fast memory, never in HBM"):
+
+    Y_intra[c, i, h, :] = Σ_{j<=i}  (C_c[i]·B_c[j]) · exp(cum[i,h]-cum[j,h])
+                                   · Δ_c[j,h] · X_c[j, h, :]
+
+Per grid cell (one (batch·chunk) × one head-block) everything — the (q, q)
+Gram matrix, the causal decay mask, the Δ weighting — is built in VMEM and
+consumed immediately by MXU matmuls; HBM traffic is exactly the operand
+tiles + the output tile (vs ~3 extra (q,q,H)-sized round-trips for the
+einsum path — a ~2.5× cut of the dominant T_mem term at mamba2's shapes).
+
+Forward only (inference prefill / building block for a custom-VJP train
+path); validated against the pure-jnp oracle in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(cc_ref, bc_ref, cum_ref, dt_ref, x_ref, o_ref,
+                      *, acc_dtype):
+    """One (batch-chunk, head-block) cell.
+
+    cc_ref/bc_ref: (q, N)       chunk C / B (group-shared across heads)
+    cum_ref/dt_ref: (q, Hb)     per-head cumulative log-decay / Δ
+    x_ref: (q, Hb, P)           Δ-unweighted inputs
+    o_ref: (q, Hb, P)           intra-chunk outputs
+    """
+    q = cc_ref.shape[0]
+    hb = cum_ref.shape[1]
+    cc = cc_ref[...].astype(acc_dtype)
+    bc = bc_ref[...].astype(acc_dtype)
+    # (q, q) Gram matrix on the MXU — stays in VMEM
+    g = jax.lax.dot_general(
+        cc, bc, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = rows >= cols
+    cum = cum_ref[...].astype(acc_dtype)  # (q, Hb)
+    dt = dt_ref[...].astype(acc_dtype)
+    for h in range(hb):  # head loop: Hb small (<= 8), unrolled
+        seg = cum[:, h][:, None] - cum[None, :, h]  # (q, q)
+        w = jnp.where(causal, g * jnp.exp(seg), 0.0) * dt[None, :, h]
+        xh = x_ref[:, h, :].astype(acc_dtype)  # (q, P)
+        yh = jax.lax.dot_general(
+            w, xh, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )
+        o_ref[:, h, :] = yh.astype(o_ref.dtype)
+
+
+def ssd_intra_pallas(
+    cc: jax.Array,    # (BC, q, N)   BC = batch * n_chunks
+    bc: jax.Array,    # (BC, q, N)
+    cum: jax.Array,   # (BC, q, H)
+    dt: jax.Array,    # (BC, q, H)
+    x: jax.Array,     # (BC, q, H, P)
+    *,
+    head_block: int = 8,
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused intra-chunk SSD. Returns (BC, q, H, P) in x.dtype."""
+    bcn, q, n = cc.shape
+    h, p = x.shape[2], x.shape[3]
+    assert cum.shape == (bcn, q, h) and dt.shape == (bcn, q, h)
+    hb = min(head_block, h)
+    assert h % hb == 0
+    grid = (bcn, h // hb)
+    kernel = functools.partial(_ssd_intra_kernel, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, q, n), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, q, n), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, q, hb), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((None, q, hb), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((None, q, hb, p), lambda b, j: (b, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q, hb, p), lambda b, j: (b, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bcn, q, h, p), x.dtype),
+        interpret=interpret,
+    )(cc, bc, cum, dt, x)
+
+
+def ssd_intra_ref(cc, bc, cum, dt, x) -> jax.Array:
+    """Pure-jnp oracle (the einsum path from models/ssm.py, f32)."""
+    g = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                   bc.astype(jnp.float32))
+    seg = cum.astype(jnp.float32)[:, :, None, :] - cum.astype(
+        jnp.float32
+    )[:, None, :, :]
+    q = cc.shape[1]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    w = jnp.where(causal[None, :, :, None], g[..., None] * jnp.exp(seg), 0.0)
+    w = w * dt.astype(jnp.float32)[:, None, :, :]
+    return jnp.einsum(
+        "bijh,bjhp->bihp", w, x.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def traffic_model(bcn: int, q: int, n: int, h: int, p: int,
+                  itemsize: int = 2) -> dict:
+    """HBM bytes: kernel (operands+output once) vs einsum path (which also
+    round-trips g (q,q), decay (q,q,H) and w (q,q,H) through HBM)."""
+    operands = bcn * (2 * q * n + 2 * q * h + q * h * p) * itemsize
+    out = bcn * q * h * p * itemsize
+    kernel = operands + out
+    einsum_extra = bcn * (q * q + 3 * q * q * h) * 4  # f32 chain
+    return {
+        "kernel_bytes": kernel,
+        "einsum_bytes": kernel + einsum_extra,
+        "ratio": (kernel + einsum_extra) / kernel,
+    }

@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For each (arch × shape × mesh) cell: build the production-sharded
+train_step / prefill_step / serve_step, ``.lower()`` it against
+ShapeDtypeStruct inputs (zero allocation — params come from
+jax.eval_shape), ``.compile()``, and record
+
+  * ``compiled.memory_analysis()``  (per-device bytes — proves it fits),
+  * ``compiled.cost_analysis()``    (FLOPs / bytes for §Roofline),
+  * the collective schedule (kinds, counts, bytes) parsed from the HLO,
+
+into ``results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --arch ... --shape ... --multipod
+  python -m repro.launch.dryrun --all [--force]     # subprocess per cell
+
+NOTE: the XLA_FLAGS line above must run before ANY jax-importing import —
+do not reorder. Smoke tests and benchmarks never import this module.
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+RESULTS_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "results",
+                 "dryrun"),
+)
+
+
+# ---------------------------------------------------------------------------
+# per-(arch, shape) launch settings (memory tuning knobs)
+# ---------------------------------------------------------------------------
+
+MICROBATCHES = {  # desired microbatch count for train_4k (clamped per mesh)
+    "nemotron-4-340b": 16,
+    "qwen2-vl-72b": 16,
+    "yi-34b": 16,
+    "deepseek-coder-33b": 16,
+    "jamba-v0.1-52b": 16,
+    "mamba2-2.7b": 8,
+    "olmoe-1b-7b": 8,
+    "granite-moe-3b-a800m": 4,
+    "qwen2-1.5b": 4,
+    "whisper-tiny": 2,
+}
+
+BF16_OPT_ARCHS = {  # bf16 Adam moments + bf16 grad accumulation (DESIGN §5)
+    "nemotron-4-340b",
+    "qwen2-vl-72b",
+}
+
+
+def pick_microbatches(arch: str, global_batch: int, dp_size: int) -> int:
+    want = MICROBATCHES.get(arch, 4)
+    mb = min(want, max(global_batch // dp_size, 1))
+    while mb > 1 and (global_batch % mb or (global_batch // mb) % dp_size):
+        mb -= 1
+    return max(mb, 1)
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             mb_override: int | None = None,
+             policy_overrides: dict | None = None):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import cell_is_skipped, get_config
+    from ..distributed.hlo import parse_collectives
+    from ..models import (
+        cache_specs,
+        init_decode_state,
+        init_params,
+        param_specs,
+    )
+    from ..models.config import SHAPES
+    from ..models.model import DTYPES, decode_step, forward
+    from ..models.sharding import make_policy
+    from ..training.steps import (
+        batch_specs,
+        build_train_step,
+        init_train_state,
+        train_state_specs,
+    )
+    from .mesh import dp_axes, make_production_mesh
+    from .specs import batch_struct, cross_kv_struct, decode_token_struct
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    out_path = os.path.join(out_dir, f"{cell_id}.json")
+    os.makedirs(out_dir, exist_ok=True)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "devices": 512 if multi_pod else 256,
+    }
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        record.update(status="skipped", reason=skip)
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"SKIP {cell_id}: {skip}")
+        return record
+
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_SSM_CHUNK"):
+        cfg = dataclasses.replace(
+            cfg, ssm_chunk=int(os.environ["REPRO_SSM_CHUNK"])
+        )
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh = make_policy(cfg, mesh, dp=dp_axes(multi_pod))
+    if policy_overrides:
+        coerced = {}
+        for k, v in policy_overrides.items():
+            if v in ("0", "1", "true", "false", "True", "False"):
+                v = v in ("1", "true", "True")
+            coerced[k] = v
+        sh = dataclasses.replace(sh, **coerced)
+    dp_size = sh.dp_size
+    if shape.global_batch % dp_size:
+        sh = dataclasses.replace(sh, shard_batch=False)
+    record.update(
+        attn_policy=sh.attn, moe_policy=sh.moe,
+        shard_batch=sh.shard_batch,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+    )
+    key = jax.random.PRNGKey(0)
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    t0 = time.time()
+
+    if shape.kind == "train":
+        mb = mb_override or pick_microbatches(arch, shape.global_batch, dp_size)
+        bf16_opt = arch in BF16_OPT_ARCHS
+        record.update(microbatches=mb, bf16_opt=bf16_opt)
+        state_structs = jax.eval_shape(
+            partial(
+                init_train_state, cfg=cfg,
+                moment_dtype=jnp.bfloat16 if bf16_opt else jnp.float32,
+            ),
+            key,
+        )
+        sspecs = train_state_specs(state_structs, cfg, sh)
+        bstructs = batch_struct(cfg, shape)
+        bspecs = batch_specs(cfg, sh)
+        step = build_train_step(
+            cfg, sh, microbatches=mb,
+            accum_dtype=jnp.bfloat16 if bf16_opt else jnp.float32,
+            opt_math_dtype=jnp.bfloat16 if bf16_opt else jnp.float32,
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(to_sh(sspecs), to_sh(bspecs)),
+            out_shardings=(to_sh(sspecs), None),
+            donate_argnums=(0,),
+        )
+        lowered = fn.lower(state_structs, bstructs)
+        n_tokens = shape.global_batch * shape.seq_len
+        record["model_flops"] = 6 * cfg.active_param_count() * n_tokens
+
+    elif shape.kind == "prefill":
+        params_structs = jax.eval_shape(partial(init_params, cfg=cfg), key)
+        pspecs = param_specs(params_structs, cfg, sh)
+        bstructs = batch_struct(cfg, shape)
+        bspecs = batch_specs(cfg, sh)
+
+        def prefill_step(params, batch):
+            out, _ = forward(
+                params, cfg, batch, sh, mode="prefill",
+                logits_positions="last",
+            )
+            return out
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(to_sh(pspecs), to_sh(bspecs)),
+        )
+        lowered = fn.lower(params_structs, bstructs)
+        n_tokens = shape.global_batch * shape.seq_len
+        record["model_flops"] = 2 * cfg.active_param_count() * n_tokens
+
+    else:  # decode
+        params_structs = jax.eval_shape(partial(init_params, cfg=cfg), key)
+        pspecs = param_specs(params_structs, cfg, sh)
+        state_structs = jax.eval_shape(
+            lambda p: init_decode_state(p, cfg, shape.global_batch,
+                                        shape.seq_len),
+            params_structs,
+        )
+        cspecs = cache_specs(state_structs, cfg, sh)
+        tok_struct = decode_token_struct(cfg, shape)
+        tok_sharding = NamedSharding(mesh, sh.spec("dp", None))
+        extra_structs, extra_shardings = (), ()
+        if cfg.is_encdec:
+            extra_structs = (cross_kv_struct(cfg, shape),)
+            kv_sh = NamedSharding(mesh, sh.spec("dp", "sp", None, None))
+            extra_shardings = ((kv_sh, kv_sh),)
+
+        def serve_step(params, state, tokens, *extra):
+            cross = extra[0] if extra else None
+            return decode_step(params, cfg, state, tokens, sh,
+                               cross_kv=cross)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(
+                to_sh(pspecs), to_sh(cspecs), tok_sharding,
+                *extra_shardings,
+            ),
+            out_shardings=(None, to_sh(cspecs)),
+            donate_argnums=(1,),
+        )
+        lowered = fn.lower(
+            params_structs, state_structs, tok_struct, *extra_structs
+        )
+        record["model_flops"] = (
+            2 * cfg.active_param_count() * shape.global_batch
+        )
+
+    record["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "code_bytes": ma.generated_code_size_in_bytes,
+        "peak_bytes_est": (
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["cost_raw"] = {  # XLA's own numbers (while bodies counted ONCE)
+        "flops": ca.get("flops", 0.0),
+        "bytes_accessed": ca.get("bytes accessed", 0.0),
+        "transcendentals": ca.get("transcendentals", 0.0),
+    }
+    # trip-count-aware walk of the compiled module (per-device totals)
+    import gzip
+
+    from ..analysis.hlo_cost import analyze_module
+
+    hlo_text = compiled.as_text()
+    with gzip.open(
+        os.path.join(out_dir, f"{cell_id}.hlo.txt.gz"), "wt"
+    ) as zf:
+        zf.write(hlo_text)
+    mc = analyze_module(hlo_text)
+    record["cost"] = {
+        "flops": mc.flops,
+        "bytes_accessed": mc.bytes,
+    }
+    record["collectives"] = {
+        "operand_bytes": mc.collective_operand_bytes,
+        "ring_bytes": mc.collective_ring_bytes,
+        "by_kind": mc.collectives_by_kind(),
+        "count": int(sum(c.count for c in mc.collectives)),
+    }
+    record["status"] = "ok"
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    mem_gb = record["memory"]["peak_bytes_est"] / 2 ** 30
+    print(
+        f"OK {cell_id}: compile={record['compile_s']}s "
+        f"mem/dev={mem_gb:.2f}GiB flops={record['cost']['flops']:.3g} "
+        f"coll={record['collectives']['count']}"
+    )
+    return record
+
+
+# ---------------------------------------------------------------------------
+# sweep driver (subprocess per cell: isolates compile memory)
+# ---------------------------------------------------------------------------
+
+def sweep(out_dir: str, force: bool = False, multipod_only: bool = False,
+          cells=None):
+    from ..configs import all_cells
+
+    todo = cells or [
+        (a, s) for a, s, _ in all_cells()
+    ]
+    results = []
+    for multi_pod in ([True] if multipod_only else [False, True]):
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch, shape_name in todo:
+            out_path = os.path.join(
+                out_dir, f"{arch}__{shape_name}__{mesh_name}.json"
+            )
+            if not force and os.path.exists(out_path):
+                with open(out_path) as f:
+                    rec = json.load(f)
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"CACHED {arch}__{shape_name}__{mesh_name}")
+                    results.append(rec)
+                    continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape_name, "--out", out_dir,
+            ]
+            if multi_pod:
+                cmd.append("--multipod")
+            proc = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=3600
+            )
+            if proc.returncode != 0:
+                err = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "error",
+                    "stderr": proc.stderr[-4000:],
+                }
+                with open(out_path, "w") as f:
+                    json.dump(err, f, indent=1)
+                print(f"ERROR {arch}__{shape_name}__{mesh_name}")
+                print(proc.stderr[-1500:])
+                results.append(err)
+            else:
+                print(proc.stdout.strip().splitlines()[-1])
+                with open(out_path) as f:
+                    results.append(json.load(f))
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    er = sum(1 for r in results if r.get("status") == "error")
+    print(f"\nsweep done: {ok} ok, {sk} skipped, {er} error")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mb", type=int, default=None,
+                    help="override train microbatch count")
+    ap.add_argument("--policy", action="append", default=[],
+                    help="Sharding field override key=val (hillclimb)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    args = ap.parse_args()
+    if args.all:
+        sweep(args.out, force=args.force)
+    else:
+        try:
+            run_cell(args.arch, args.shape, args.multipod, args.out,
+                     mb_override=args.mb,
+                     policy_overrides=dict(
+                         kv.split("=", 1) for kv in args.policy
+                     ))
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

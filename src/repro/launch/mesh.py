@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets the placeholder
+device count before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod v5e 16x16 (256 chips) or 2-pod 2x16x16 (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def dp_axes(multi_pod: bool = False) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for 8-host-device tests."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(AxisType.Auto,) * 2,
+    )

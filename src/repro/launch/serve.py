@@ -1,0 +1,81 @@
+"""Serving launcher: batched decode against a KV cache.
+
+Local demo (CPU, reduced config):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen2-1.5b --smoke --batch 4 --prompt-len 16 --gen 32
+
+Serves batched requests through prefill (flash attention) + step decode —
+the same code paths the dry-run lowers at production shapes/meshes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config, get_smoke
+    from ..models import decode_step, init_decode_state, init_params
+    from ..models.model import forward
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    b, pl = args.batch, args.prompt_len
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (b, pl), 0, cfg.vocab_size
+    )
+
+    max_len = pl + args.gen + 1
+    state = init_decode_state(params, cfg, b, max_len)
+
+    # prefill by stepping the prompt through decode (keeps the cache exact;
+    # a production server uses the chunked prefill path + cache handoff)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+    t0 = time.time()
+    logits = None
+    for t in range(pl):
+        logits, state = step(params, state, prompts[:, t: t + 1])
+    prefill_t = time.time() - t0
+
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, state = step(params, state, tok)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1, :] / args.temperature
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    decode_t = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={b}")
+    print(f"prefill: {pl} toks in {prefill_t:.2f}s")
+    print(
+        f"decode: {args.gen} toks in {decode_t:.2f}s "
+        f"({decode_t / max(args.gen - 1, 1) * 1000:.1f} ms/tok)"
+    )
+    print("sample generation (token ids):", gen[0, :16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

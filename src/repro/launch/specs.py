@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import ArchConfig, RunShape
+from ..models.config import SHAPES
+from ..models.model import DTYPES
+
+
+def batch_struct(cfg: ArchConfig, shape: RunShape) -> dict:
+    """Training/prefill batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    dtype = DTYPES[cfg.dtype]
+    out = {}
+    if cfg.frontend != "none":
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.is_encdec:
+        t = cfg.max_target_len
+        out["dec_tokens"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        out["dec_labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    else:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def decode_token_struct(cfg: ArchConfig, shape: RunShape):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def cross_kv_struct(cfg: ArchConfig, shape: RunShape):
+    """Whisper decode: encoder K/V stand-in (B, S_enc, kv, hd)."""
+    dtype = DTYPES[cfg.dtype]
+    return (
+        jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.n_kv_heads, cfg.hd),
+            dtype,
+        ),
+    ) * 2
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Public entry: all input structs for an (arch, shape) cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_struct(cfg, shape)}
+    return {"tokens": decode_token_struct(cfg, shape)}

@@ -1,0 +1,29 @@
+"""LM model zoo: assigned architectures on a shared substrate."""
+
+from .config import SHAPES, ArchConfig, RunShape
+from .model import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_specs,
+    cache_specs,
+)
+from .sharding import NULL, Sharding, make_policy
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "RunShape",
+    "decode_step",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "loss_fn",
+    "param_specs",
+    "cache_specs",
+    "NULL",
+    "Sharding",
+    "make_policy",
+]

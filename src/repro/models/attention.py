@@ -1,0 +1,318 @@
+"""GQA attention: train/prefill (full causal) and single-token decode with
+KV cache. One implementation, two sharding policies (DESIGN.md §5):
+
+  head_tp  — q/kv heads sharded over 'tp' (kv replicated when
+             n_kv_heads < tp, the standard Megatron GQA treatment);
+  context  — heads intact, *sequence* sharded over 'tp' for the attention
+             math (context parallelism) — used when n_heads % tp != 0
+             (yi-34b/deepseek 56H, granite 24H, qwen2 12H, whisper 6H on a
+             16-way model axis).
+
+Decode KV caches are sharded over the sequence axis ('sp'); the softmax and
+PV contractions over the sharded axis lower to the flash-decoding pattern
+(local max/sum + small cross-shard reductions) under GSPMD.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_rope, dense_init
+from .sharding import NULL, Sharding
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, n_kv, hd)
+    v: jax.Array  # (B, S_max, n_kv, hd)
+    length: jax.Array  # () int32 — filled prefix length
+
+
+def init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, hd), in_axis=0, dtype=dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, hd), in_axis=0, dtype=dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, hd), in_axis=0, dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, d), in_axis=0, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    return p
+
+
+def _proj_spec(sh: Sharding, heads: int):
+    """Weight spec for (d, H, hd) projections under the active policy."""
+    if sh.attn == "head_tp" and heads % max(sh.tp_size, 1) == 0:
+        return ("fsdp", "tp", None)
+    return (("fsdp", "tp"), None, None)  # context: fully FSDP, heads intact
+
+
+def _qkv(p: dict, cfg: ArchConfig, x: jax.Array, sh: Sharding):
+    wq = sh.constrain(p["wq"], *_proj_spec(sh, cfg.n_heads))
+    wk = sh.constrain(p["wk"], *_proj_spec(sh, cfg.n_kv_heads))
+    wv = sh.constrain(p["wv"], *_proj_spec(sh, cfg.n_kv_heads))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _act_specs(sh: Sharding, cfg: ArchConfig):
+    """(q_spec, kv_spec) activation constraints for (B, S, H, hd)."""
+    if sh.attn == "head_tp":
+        q_spec = ("dp", None, "tp", None)
+        kv_spec = (
+            ("dp", None, "tp", None)
+            if cfg.n_kv_heads % max(sh.tp_size, 1) == 0
+            else ("dp", None, None, None)  # kv replicated across tp
+        )
+    else:  # context parallel: shard the sequence
+        q_spec = ("dp", "sp", None, None)
+        kv_spec = ("dp", None, None, None)
+    return q_spec, kv_spec
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    sh: Sharding = NULL,
+    *,
+    causal: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Full (train/prefill) attention. x: (B, S, D) -> (B, S, D).
+
+    ``kv_override`` supplies encoder K/V for cross-attention (no RoPE).
+    """
+    b, s, d = x.shape
+    q, k, v = _qkv(p, cfg, x, sh)
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    else:
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope) \
+        if kv_override is None else q
+    q_spec, kv_spec = _act_specs(sh, cfg)
+    q = sh.constrain(q, *q_spec)
+    k = sh.constrain(k, *kv_spec)
+    v = sh.constrain(v, *kv_spec)
+
+    # expand KV to full heads (keeps the head axis TP-shardable even when
+    # n_kv_heads < tp — the grouped (kv, g) form would force replication)
+    groups = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+        k = sh.constrain(k, *q_spec)
+        v = sh.constrain(v, *q_spec)
+    scale = cfg.hd ** -0.5
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    if causal:
+        sk = k.shape[1]
+        mask = positions[:, None, :, None] >= jnp.arange(sk)[
+            None, None, None, :
+        ]
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    wo = sh.constrain(
+        p["wo"],
+        *(("tp", None, "fsdp") if sh.attn == "head_tp"
+          and cfg.n_heads % max(sh.tp_size, 1) == 0
+          else (None, None, ("fsdp", "tp"))),
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return sh.constrain(y, "dp", None, None)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    *,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    causal: bool = True,
+) -> jax.Array:
+    """Double-blocked streaming-softmax attention (pure JAX, lax.scan).
+
+    Used for long-sequence *prefill* (no-grad): per-step score blocks are
+    (B, kv, g, q_chunk, kv_chunk) instead of (…, S, S) — memory O(S·chunk)
+    not O(S²). q: (B, Sq, H, hd); k/v: (B, Sk, n_kv, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    groups = h // max(cfg.n_kv_heads, 1)
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+
+    qg = q.reshape(b, nq, q_chunk, h, hd)
+    kc = k.reshape(b, nk, kv_chunk, cfg.n_kv_heads, hd)
+    vc = v.reshape(b, nk, kv_chunk, cfg.n_kv_heads, hd)
+    pos_q = positions.reshape(b, nq, q_chunk)
+    kv_pos = jnp.arange(sk).reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        q_blk, posq = qi  # (b, qc, h, hd), (b, qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk, posk = ki
+            if groups > 1:  # expand KV per chunk (head axis TP-shardable)
+                k_blk = jnp.repeat(k_blk, groups, axis=2)
+                v_blk = jnp.repeat(v_blk, groups, axis=2)
+            s = jnp.einsum("bqhk,bshk->bhqs", q_blk, k_blk) * scale
+            s = s.astype(jnp.float32)
+            if causal:
+                mask = posq[:, None, :, None] >= posk[None, None, None, :]
+                s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            if causal:
+                # fully-masked rows (kv block after q block) must contribute
+                # exactly zero — exp(-1e30 - (-1e30)) would give 1
+                p = p * mask.astype(p.dtype)
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhqs,bshk->bqhk", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            acc_new = corr.transpose(0, 2, 1)[..., None] * acc + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             kv_pos),
+        )
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        q_step, None,
+        (qg.transpose(1, 0, 2, 3, 4), pos_q.transpose(1, 0, 2)),
+    )
+    # outs: (nq, b, qc, h, hd) -> (b, sq, h, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention_prefill(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    sh: Sharding = NULL,
+    *,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Prefill: flash attention + returns (output, (k, v)) for cache fill."""
+    b, s, d = x.shape
+    q, k, v = _qkv(p, cfg, x, sh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    q_spec, kv_spec = _act_specs(sh, cfg)
+    q = sh.constrain(q, *q_spec)
+    k = sh.constrain(k, *kv_spec)
+    v = sh.constrain(v, *kv_spec)
+    out = flash_attention(
+        q, k, v, positions, cfg, q_chunk=q_chunk, kv_chunk=kv_chunk
+    )
+    wo = sh.constrain(
+        p["wo"],
+        *(("tp", None, "fsdp") if sh.attn == "head_tp"
+          and cfg.n_heads % max(sh.tp_size, 1) == 0
+          else (None, None, ("fsdp", "tp"))),
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return sh.constrain(y, "dp", None, None), (k, v)
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype
+) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_spec(cfg: ArchConfig, sh: Sharding):
+    """KV cache sharding: sequence-sharded ('sp') by default — the flash-
+    decoding layout — falling back to head sharding when configured."""
+    if sh.decode_cache == "heads" and cfg.n_kv_heads % max(sh.tp_size, 1) == 0:
+        return ("dp", None, "tp", None)
+    return ("dp", "sp", None, None)
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,
+    cache: KVCache,
+    cfg: ArchConfig,
+    sh: Sharding = NULL,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, D); cache holds `length` valid entries.
+
+    The new K/V is written at position `length`; attention runs over the
+    full cache with a validity mask (positions >= length masked out).
+    """
+    b, one, d = x.shape
+    assert one == 1
+    pos = jnp.full((b, 1), cache.length, jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, sh)
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta, cfg.mrope)
+
+    spec = cache_spec(cfg, sh)
+    ck = sh.constrain(
+        jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, cache.length, 0, 0)
+        ),
+        *spec,
+    )
+    cv = sh.constrain(
+        jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, cache.length, 0, 0)
+        ),
+        *spec,
+    )
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, groups, cfg.hd)
+    scale = cfg.hd ** -0.5
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, ck) * scale
+    scores = scores.astype(jnp.float32)
+    valid = jnp.arange(ck.shape[1])[None, None, None, None, :] <= cache.length
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, cv)
+    out = out.reshape(b, 1, cfg.n_heads, cfg.hd)
+    wo = p["wo"]
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    y = sh.constrain(y, "dp", None, None)
+    return y, KVCache(ck, cv, cache.length + 1)

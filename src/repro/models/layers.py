@@ -1,0 +1,179 @@
+"""Shared neural layers: norms, rotary embeddings, token embedding/logits,
+MLP variants. Pure functions over param dicts; f32 where numerically
+sensitive, bf16 elsewhere (dtype policy from the config)."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .sharding import NULL, Sharding
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, dtype) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(
+            jnp.float32
+        )
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, mrope: bool = False
+) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32, or (..., S, 3) for
+    M-RoPE (temporal/height/width sections — text uses identical triple,
+    which reduces exactly to standard RoPE)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope:
+        if positions.ndim == x.ndim - 2:  # text-only: expand to 3 sections
+            positions = jnp.stack([positions] * 3, axis=-1)
+        # split frequency bands into 3 sections (t/h/w), qwen2-vl style
+        n = freqs.shape[0]
+        s1, s2 = n // 3, 2 * n // 3
+        section = jnp.concatenate(
+            [
+                jnp.zeros((s1,), jnp.int32),
+                jnp.ones((s2 - s1,), jnp.int32),
+                jnp.full((n - s2,), 2, jnp.int32),
+            ]
+        )
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(
+                section[None, None], positions.shape[:-1] + (n,)
+            ).astype(jnp.int32),
+            axis=-1,
+        )  # (..., S, hd/2): per-band position
+        angles = pos[..., None, :] * freqs  # (..., S, 1, hd/2)
+    else:
+        angles = positions[..., None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embedding + logits
+# --------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ArchConfig, dtype) -> dict:
+    v = cfg.padded_vocab
+    p = {"table": embed_init(key, (v, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, v), dtype=dtype
+        )
+    return p
+
+
+def embed_tokens(p: dict, ids: jax.Array, sh: Sharding = NULL) -> jax.Array:
+    table = sh.constrain(p["table"], "tp", "fsdp")
+    out = jnp.take(table, ids, axis=0)
+    return sh.constrain(out, "dp", None, None)
+
+
+def embed_vectors(x: jax.Array, sh: Sharding = NULL) -> jax.Array:
+    """Stub-frontend path: inputs are already (B, S, D) embeddings."""
+    return sh.constrain(x, "dp", None, None)
+
+
+def logits(
+    p: dict, x: jax.Array, sh: Sharding = NULL, vocab_size: int | None = None
+) -> jax.Array:
+    head = p.get("head")
+    if head is None:
+        head = p["table"].T
+    head = sh.constrain(head, "fsdp", "tp")
+    out = jnp.einsum("bsd,dv->bsv", x, head)
+    v_pad = head.shape[-1]
+    if vocab_size is not None and vocab_size < v_pad:
+        # mask padded vocab rows so softmax/argmax never see them
+        mask = jnp.arange(v_pad) < vocab_size
+        out = jnp.where(mask, out, jnp.asarray(-1e30, out.dtype))
+    return sh.constrain(out, "dp", None, "tp")
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int, dtype) -> dict:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "silu_glu":
+        return {
+            "wi": dense_init(k1, (d, d_ff), dtype=dtype),
+            "wg": dense_init(k2, (d, d_ff), dtype=dtype),
+            "wo": dense_init(k3, (d_ff, d), dtype=dtype),
+        }
+    return {
+        "wi": dense_init(k1, (d, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d), dtype=dtype),
+    }
+
+
+def apply_mlp(
+    p: dict, x: jax.Array, cfg: ArchConfig, sh: Sharding = NULL
+) -> jax.Array:
+    wi = sh.constrain(p["wi"], "fsdp", "tp")
+    wo = sh.constrain(p["wo"], "tp", "fsdp")
+    h = jnp.einsum("bsd,df->bsf", x, wi)
+    h = sh.constrain(h, "dp", None, "tp")
+    if cfg.act == "silu_glu":
+        wg = sh.constrain(p["wg"], "fsdp", "tp")
+        g = jnp.einsum("bsd,df->bsf", x, wg)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(h.dtype)
+    else:  # gelu
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, wo)
+    return sh.constrain(out, "dp", None, None)

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts: top-k router + capacity-based dispatch.
+
+Dispatch is FLOP-honest (only top_k × capacity_factor worth of expert
+compute, never dense all-experts) and compile-friendly at 512 devices: token
+routing uses sort/cumsum/scatter arithmetic with O(T·k) memory — no
+(T, E, C) one-hot dispatch tensors.
+
+Sharding policies (sharding.Sharding.moe):
+  'expert' — experts sharded over 'tp' (EP); dispatch crosses the mesh via
+             GSPMD-inserted all-to-all on the (E, C, D) buffers.
+  'ffn'    — expert count kept local, per-expert FFN dim sharded over 'tp'
+             (for n_experts % tp != 0, e.g. granite's 40 experts on 16).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init
+from .sharding import NULL, Sharding
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[2], (e, f, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.act == "silu_glu":
+        p["wg"] = dense_init(ks[3], (e, d, f), in_axis=1, dtype=dtype)
+    return p
+
+
+def _expert_specs(sh: Sharding):
+    """(wi_spec, wo_spec) under the active MoE policy."""
+    if sh.moe == "expert":
+        return ("tp", "fsdp", None), ("tp", None, "fsdp")
+    return (None, "fsdp", "tp"), (None, "tp", "fsdp")
+
+
+def apply_moe(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    sh: Sharding = NULL,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Tokens over capacity are dropped
+    (standard Switch/GShard semantics; capacity_factor=1.25 default)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # ---- router (f32 for numerics)
+    logits = xf.astype(jnp.float32) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=1),
+        axis=0,
+    )
+    aux = e * jnp.sum(me * ce)
+
+    # ---- capacity assignment: position of each (token, slot) within its
+    # expert's queue, computed with a cumsum over the flattened choices
+    # capacity rounded up to 256 so the buffer's cap dim stays shardable
+    cap = max((int(t * k * capacity_factor / e) + 255) // 256 * 256, 256)
+    flat_expert = expert_ids.reshape(-1)  # (T*k,) row-major: token major
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot) * onehot
+    pos_in_expert = jnp.sum(pos_in_expert, axis=-1)  # (T*k,)
+    keep = pos_in_expert < cap
+
+    # ---- dispatch: gather tokens into (E, cap, D) buffers via scatter
+    buf_idx = jnp.where(keep, flat_expert * cap + pos_in_expert, e * cap)
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    dispatch = jnp.zeros((e * cap + 1,), jnp.int32).at[buf_idx].set(
+        token_idx + 1, mode="drop"
+    )[: e * cap]
+    # dispatch[j] = 1 + token index occupying buffer slot j (0 = empty)
+    xe = jnp.take(
+        jnp.concatenate([jnp.zeros((1, d), xf.dtype), xf], axis=0),
+        dispatch,
+        axis=0,
+    ).reshape(e, cap, d)
+    cap_axis = "dp" if sh.moe_dispatch == "dp" else None
+    xe = sh.constrain(
+        xe, "tp" if sh.moe == "expert" else None, cap_axis, None
+    )
+
+    # ---- expert FFN (batched over experts)
+    wi_spec, wo_spec = _expert_specs(sh)
+    wi = sh.constrain(p["wi"], *wi_spec)
+    wo = sh.constrain(p["wo"], *wo_spec)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    if cfg.act == "silu_glu":
+        wg = sh.constrain(p["wg"], *wi_spec)
+        g = jnp.einsum("ecd,edf->ecf", xe, wg)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(h.dtype)
+    h = sh.constrain(
+        h, "tp" if sh.moe == "expert" else None, cap_axis,
+        "tp" if sh.moe == "ffn" else None,
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wo)  # (E, cap, D)
+    ye = sh.constrain(
+        ye, "tp" if sh.moe == "expert" else None, cap_axis, None
+    )
+
+    # ---- combine: scatter-add expert outputs back to tokens, gate-weighted
+    flat_ye = ye.reshape(e * cap, d)
+    slot_of_choice = jnp.where(keep, flat_expert * cap + pos_in_expert, 0)
+    y_choice = jnp.take(flat_ye, slot_of_choice, axis=0)  # (T*k, D)
+    w = (gate_vals.reshape(-1) * keep).astype(y_choice.dtype)  # (T*k,)
+    y = jnp.sum(
+        (y_choice * w[:, None]).reshape(t, k, d), axis=1
+    )
+    y = y.reshape(b, s, d).astype(x.dtype)
+    return sh.constrain(y, "dp", None, None), aux

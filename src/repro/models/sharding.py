@@ -1,0 +1,165 @@
+"""Sharding policy: logical-axis resolution + activation constraints.
+
+Logical axes:
+  'dp'   data parallel      -> ('pod', 'data') multi-pod, ('data',) single
+  'fsdp' param/opt sharding -> same mesh axes as dp (ZeRO over the DP group)
+  'tp'   tensor parallel    -> 'model'
+  'sp'   sequence/context   -> 'model' (shares the model axis; used for
+                               attention in archs whose head counts don't
+                               divide the TP degree, and for long decode
+                               KV caches)
+
+Per-arch attention policy:
+  'head_tp'  shard q/kv heads over tp (requires n_heads % tp == 0)
+  'context'  shard the sequence over tp for attention math (heads intact)
+
+The policy object is explicit (no global state): models take it as an
+argument; NULL (mesh=None) turns every constraint into a no-op so smoke
+tests run on one device.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ArchConfig
+
+
+@dataclass(frozen=True)
+class Sharding:
+    mesh: Mesh | None = None
+    dp: tuple[str, ...] = ("data",)
+    tp: str | None = "model"
+    attn: str = "head_tp"       # head_tp | context
+    moe: str = "expert"         # expert | ffn
+    decode_cache: str = "seq"   # seq | heads
+    shard_batch: bool = True    # False for global_batch < dp (long_500k)
+    sp_activations: bool = False  # Megatron-SP: shard layer-boundary
+                                  # activations over 'sp' (seq) — shrinks
+                                  # scan carries by tp_size
+    moe_dispatch: str = "replicated"  # replicated | dp: sharding of the
+                                      # (E, cap, D) dispatch buffers along
+                                      # cap (hillclimb lever, §Perf)
+
+    # ---------------------------------------------------------------- axes
+    def _resolve(self, dim) -> object:
+        if dim is None:
+            return None
+        if isinstance(dim, (tuple, list)):
+            out = []
+            for d in dim:
+                r = self._resolve(d)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        if dim == "dp":
+            if not self.shard_batch:
+                return None
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if dim == "fsdp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if dim in ("tp", "sp"):
+            return self.tp
+        raise ValueError(f"unknown logical axis {dim!r}")
+
+    def spec(self, *dims) -> P:
+        return P(*[self._resolve(d) for d in dims])
+
+    def fit_spec(self, shape, spec: P) -> P:
+        """Drop trailing mesh axes per dim until the dim size divides the
+        sharding (small models on big meshes: whisper's 384-wide dims can't
+        split 256 ways — back off to the largest feasible prefix)."""
+        if self.mesh is None:
+            return spec
+        out = []
+        for size, part in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if part is None:
+                out.append(None)
+                continue
+            axes = list(part) if isinstance(part, tuple) else [part]
+            while axes:
+                prod = 1
+                for a in axes:
+                    prod *= self.mesh.shape[a]
+                if size % prod == 0:
+                    break
+                axes.pop()
+            out.append(tuple(axes) if len(axes) > 1 else
+                       (axes[0] if axes else None))
+        return P(*out)
+
+    def named(self, *dims) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*dims))
+
+    def constrain(self, x: jax.Array, *dims) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.fit_spec(x.shape, self.spec(*dims))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp is None:
+            return 1
+        return self.mesh.shape[self.tp]
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+
+NULL = Sharding(mesh=None)
+
+
+def attention_policy(cfg: ArchConfig, tp_size: int) -> str:
+    """head_tp when the TP degree divides the head count, else context
+    parallelism (see module docstring)."""
+    if tp_size <= 1:
+        return "head_tp"
+    return "head_tp" if cfg.n_heads % tp_size == 0 else "context"
+
+
+def moe_policy(cfg: ArchConfig, tp_size: int) -> str:
+    """Expert parallelism when experts divide TP, else TP within experts."""
+    if cfg.n_experts and cfg.n_experts % max(tp_size, 1) == 0:
+        return "expert"
+    return "ffn"
+
+
+def make_policy(
+    cfg: ArchConfig,
+    mesh: Mesh | None,
+    dp: tuple[str, ...] = ("data",),
+    tp: str | None = "model",
+    sp_activations: bool | None = None,
+) -> Sharding:
+    if mesh is None:
+        return NULL
+    tp_size = mesh.shape[tp] if tp else 1
+    if sp_activations is None:
+        # SSD's chunk scan needs the full local sequence; attention-family
+        # archs take the Megatron-SP boundary for free
+        sp_activations = cfg.family not in ("ssm", "hybrid")
+    return Sharding(
+        mesh=mesh,
+        dp=dp,
+        tp=tp,
+        attn=attention_policy(cfg, tp_size),
+        moe=moe_policy(cfg, tp_size),
+        sp_activations=sp_activations,
+    )

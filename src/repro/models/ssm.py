@@ -1,0 +1,253 @@
+"""Mamba2 SSD (state-space duality) block: chunked parallel form for
+train/prefill, O(1)-state recurrent form for decode.
+
+Math (per head, head_dim P, state N):
+    h_t = exp(Δ_t A) · h_{t-1} + Δ_t · B_t x_tᵀ      h ∈ R^{N×P}
+    y_t = C_tᵀ h_t + D · x_t
+Chunked SSD (chunk Q): intra-chunk quadratic term (C B^T ⊙ causal-decay
+mask) X, plus inter-chunk state carried by a lax.scan — O(S·Q + S·N·P)
+instead of O(S²) attention.
+
+Jamba note (DESIGN.md §4): Jamba v0.1's Mamba-1 layers are realized with
+the same SSD formulation at its dimensions (the selective-scan recurrence
+is the P=1 special case; we use the head-grouped equivalent).
+
+Sharding: heads over 'tp' (80/16=5 for mamba2-2.7b, 128/16=8 for jamba);
+B/C are group-shared (ngroups=1) and replicated across tp.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# §Perf hillclimb lever (EXPERIMENTS.md): lean SSD — bf16 decay tensors +
+# 3-operand einsums that avoid materializing the (B,nc,q,H,N) Δ-scaled
+# factors. Off by default (baseline = paper-faithful einsum SSD).
+_LEAN = os.environ.get("REPRO_SSD_LEAN") == "1"
+
+from .config import ArchConfig
+from .layers import dense_init
+from .sharding import NULL, Sharding
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, conv_w-1, conv_channels) rolling window
+    state: jax.Array  # (B, H, N, P) ssm state
+    length: jax.Array
+
+
+def init_ssm(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, p_dim = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], (d, di), dtype=dtype),
+        "wx": dense_init(ks[1], (d, di), dtype=dtype),
+        "wB": dense_init(ks[2], (d, n), dtype=dtype),
+        "wC": dense_init(ks[3], (d, n), dtype=dtype),
+        "wdt": dense_init(ks[4], (d, h), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[5], (cfg.ssm_conv, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "wo": dense_init(ks[6], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    dtype = y.dtype
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(
+        dtype
+    )
+
+
+def apply_ssm(
+    p: dict, x: jax.Array, cfg: ArchConfig, sh: Sharding = NULL
+) -> jax.Array:
+    """Chunked SSD forward. x: (B, S, D) -> (B, S, D). S % chunk == 0."""
+    b, s, d = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    z = jnp.einsum("bsd,de->bse", x, sh.constrain(p["wz"], "fsdp", "tp"))
+    xin = jnp.einsum("bsd,de->bse", x, sh.constrain(p["wx"], "fsdp", "tp"))
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+
+    # causal depthwise conv over (x, B, C)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xin = conv_out[..., : cfg.d_inner]
+    bmat = conv_out[..., cfg.d_inner: cfg.d_inner + n]
+    cmat = conv_out[..., cfg.d_inner + n:]
+
+    xh = xin.reshape(b, s, h, pd)
+    xh = sh.constrain(xh, "dp", None, "tp", None)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+    log_decay = dt * a  # (B, S, H) log a_t, <= 0
+
+    # chunk views (head dim sharded over tp so the (B,nc,q,q,H) intra-chunk
+    # decay tensor below is partitioned, not replicated)
+    xc = sh.constrain(xh.reshape(b, nc, q, h, pd), "dp", None, None, "tp",
+                      None)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = sh.constrain(dt.reshape(b, nc, q, h), "dp", None, None, "tp")
+    ld = sh.constrain(log_decay.reshape(b, nc, q, h), "dp", None, None, "tp")
+    cum = jnp.cumsum(ld, axis=2)  # within-chunk cumulative log decay
+
+    # ---- intra-chunk (quadratic in q): Y[i] += Σ_{j<=i} C_i·B_j decay Δ_j x_j
+    gmat = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, nc, q, q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    if _LEAN:
+        # Δ folded into X once ((B,nc,q,H,P) — same size as xc); decay kept
+        # bf16; 3-operand einsums skip the (B,nc,q,q,H) w_ij f32 chain
+        xc_dt = (xc.astype(jnp.float32) * dtc[..., None]).astype(x.dtype)
+        y_intra = jnp.einsum(
+            "bcij,bcijh,bcjhp->bcihp",
+            gmat.astype(x.dtype),
+            decay.astype(x.dtype),
+            xc_dt,
+            optimize="optimal",
+        )
+    else:
+        w_ij = gmat[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,i,j,H)
+        w_ij = sh.constrain(w_ij, "dp", None, None, None, "tp")
+        y_intra = jnp.einsum(
+            "bcijh,bcjhp->bcihp", w_ij.astype(x.dtype), xc
+        )
+    y_intra = sh.constrain(y_intra, "dp", None, None, "tp", None)
+
+    # ---- chunk states: S_c = Σ_j decay_to_end_j Δ_j B_j x_jᵀ  (B,nc,H,N,P)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,q,H)
+    if _LEAN:
+        s_c = jnp.einsum(
+            "bcjn,bcjh,bcjhp->bchnp",
+            bc.astype(x.dtype),
+            decay_to_end.astype(x.dtype),
+            xc_dt,
+            optimize="optimal",
+        )
+    else:
+        sb = bc[:, :, :, None, :] * (dtc * decay_to_end)[..., None]
+        s_c = jnp.einsum("bcjhn,bcjhp->bchnp", sb.astype(x.dtype), xc)
+
+    # ---- inter-chunk recurrence (scan over chunks)
+    total = jnp.exp(cum[:, :, -1, :])  # (B, nc, H) full-chunk decay
+
+    def step(hprev, inp):
+        s_chunk, tot = inp  # (B,H,N,P), (B,H)
+        hnew = hprev * tot[..., None, None] + s_chunk.astype(jnp.float32)
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, pd), jnp.float32)
+    _, h_before = jax.lax.scan(
+        step, h0,
+        (s_c.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state entering chunk
+
+    # ---- inter-chunk output: y += (C_i decay_from_start_i) · h_before
+    decay_from_start = jnp.exp(cum)  # (B,nc,q,H)
+    if _LEAN:
+        y_inter = jnp.einsum(
+            "bcin,bcih,bchnp->bcihp",
+            cc.astype(x.dtype),
+            decay_from_start.astype(x.dtype),
+            h_before.astype(x.dtype),
+            optimize="optimal",
+        )
+    else:
+        cd = cc[:, :, :, None, :] * decay_from_start[..., None]
+        y_inter = jnp.einsum(
+            "bcihn,bchnp->bcihp", cd.astype(x.dtype),
+            h_before.astype(x.dtype)
+        )
+
+    y = (y_intra + y_inter).reshape(b, s, h, pd)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, sh.constrain(p["wo"], "tp", "fsdp"))
+    return sh.constrain(out, "dp", None, None)
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> SSMCache:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def apply_ssm_decode(
+    p: dict,
+    x: jax.Array,
+    cache: SSMCache,
+    cfg: ArchConfig,
+    sh: Sharding = NULL,
+) -> tuple[jax.Array, SSMCache]:
+    """Single-token recurrent step. x: (B, 1, D)."""
+    b, one, d = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])[:, 0]
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"])[:, 0]
+    bvec = jnp.einsum("bsd,dn->bsn", x, p["wB"])[:, 0]
+    cvec = jnp.einsum("bsd,dn->bsn", x, p["wC"])[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])[:, 0].astype(jnp.float32)
+
+    conv_in = jnp.concatenate([xin, bvec, cvec], axis=-1)  # (B, C)
+    window = jnp.concatenate([cache.conv, conv_in[:, None, :]], axis=1)
+    w = p["conv_w"]  # (W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xin = conv_out[:, : cfg.d_inner]
+    bvec = conv_out[:, cfg.d_inner: cfg.d_inner + n].astype(jnp.float32)
+    cvec = conv_out[:, cfg.d_inner + n:].astype(jnp.float32)
+
+    xh = xin.reshape(b, h, pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, H)
+    decay = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B, H)
+    state = cache.state * decay[..., None, None] + (
+        bvec[:, None, :, None] * (dt[..., None] * xh)[:, :, None, :]
+    )  # (B,H,N,P)
+    y = jnp.einsum("bn,bhnp->bhp", cvec, state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, p["wo"])[:, None, :]
+    new_cache = SSMCache(window[:, 1:, :], state, cache.length + 1)
+    return sh.constrain(out, "dp", None, None), new_cache

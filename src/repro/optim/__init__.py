@@ -1,0 +1,14 @@
+"""Optimizer substrate: AdamW with ZeRO-shardable f32 moments, global-norm
+clipping, LR schedules."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, opt_state_specs
+from .schedule import cosine_schedule, linear_warmup
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_specs",
+    "cosine_schedule",
+    "linear_warmup",
+]

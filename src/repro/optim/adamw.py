@@ -1,0 +1,150 @@
+"""AdamW, hand-rolled for explicit sharding control.
+
+Moments are f32 and inherit the parameter's PartitionSpec (they live fully
+sharded under FSDP — ZeRO-style: with params sharded over ('data','model')
+axes the optimizer state adds 8 bytes/param spread over the whole mesh).
+bf16 params are updated through an f32 side computation (no separate master
+copy: update math runs in f32 from the f32 moments and the bf16 param is
+re-rounded — adequate at these LRs and halves optimizer memory; flip
+``keep_master=True`` for exact fp32-master semantics).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any          # pytree like params, f32
+    v: Any          # pytree like params, f32
+    master: Any     # f32 params pytree or None
+
+
+def adamw_init(
+    params, keep_master: bool = False, moment_dtype=jnp.float32
+) -> AdamWState:
+    """moment_dtype=bf16 halves optimizer memory (used for the >=300B
+    archs to fit v5e HBM — the 8-bit-Adam-style tradeoff, DESIGN.md §5)."""
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, moment_dtype), params
+    )
+    master = (
+        jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        if keep_master
+        else None
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros,
+        v=jax.tree.map(jnp.copy, zeros),
+        master=master,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    math_dtype=None,
+):
+    """Returns (new_params, new_state, metrics).
+
+    ``math_dtype``: update arithmetic precision (default f32). bf16 halves
+    the f32-upcast temporaries for the >=300B archs (8-bit-Adam-style
+    memory/precision tradeoff, DESIGN.md §5).
+    """
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mdt = math_dtype or jnp.float32
+
+    def upd_math(p, g, m, v, master):
+        g = g.astype(mdt) * scale.astype(mdt)
+        mdtype = m.dtype
+        m_new = b1 * m.astype(mdt) + (1 - b1) * g
+        v_new = b2 * v.astype(mdt) + (1 - b2) * jnp.square(g)
+        mh = (m_new / c1).astype(jnp.float32)
+        vh = (v_new / c2).astype(jnp.float32)
+        base = (
+            master if master is not None else p.astype(jnp.float32)
+        ) if mdt == jnp.float32 else p.astype(mdt)
+        delta = (mh / (jnp.sqrt(vh) + eps)).astype(mdt) + (
+            weight_decay * base
+        ).astype(mdt)
+        new_master = (base.astype(mdt) - (lr * delta).astype(mdt))
+        return (
+            new_master.astype(p.dtype),
+            m_new.astype(mdtype),
+            v_new.astype(mdtype),
+            new_master if master is not None else None,
+        )
+
+    upd = upd_math
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    leaves_ma = (
+        treedef.flatten_up_to(state.master)
+        if state.master is not None
+        else [None] * len(leaves_p)
+    )
+    out = [
+        upd(p, g, m, v, ma)
+        for p, g, m, v, ma in zip(
+            leaves_p, leaves_g, leaves_m, leaves_v, leaves_ma
+        )
+    ]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_master = (
+        treedef.unflatten([o[3] for o in out])
+        if state.master is not None
+        else None
+    )
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return (
+        new_params,
+        AdamWState(step, new_m, new_v, new_master),
+        metrics,
+    )
+
+
+def opt_state_specs(param_spec_tree, keep_master: bool = False) -> AdamWState:
+    """Moments inherit the param specs (fully sharded, ZeRO-style)."""
+    from jax.sharding import PartitionSpec as P
+
+    return AdamWState(
+        step=P(),
+        m=param_spec_tree,
+        v=jax.tree.map(lambda s: s, param_spec_tree),
+        master=(
+            jax.tree.map(lambda s: s, param_spec_tree) if keep_master else None
+        ),
+    )

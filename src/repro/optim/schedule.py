@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(
+    step,
+    peak: float,
+    warmup_steps: int,
+    total_steps: int,
+    floor: float = 0.1,
+):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    frac = jnp.clip(
+        (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return peak * warm * cos

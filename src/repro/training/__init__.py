@@ -1,0 +1,21 @@
+"""Training/serving substrate: jit step builders with production sharding,
+microbatch accumulation, CP-compressed DP gradients, fault-tolerant loop."""
+
+from .steps import (
+    TrainState,
+    build_serve_step,
+    build_train_step,
+    init_train_state,
+    train_state_specs,
+)
+from .loop import TrainLoop, LoopConfig
+
+__all__ = [
+    "TrainState",
+    "build_serve_step",
+    "build_train_step",
+    "init_train_state",
+    "train_state_specs",
+    "TrainLoop",
+    "LoopConfig",
+]

@@ -1,0 +1,20 @@
+"""Shared pytest fixtures.
+
+NOTE: deliberately does NOT set --xla_force_host_platform_device_count —
+smoke tests and benches must see 1 device. Multi-device distributed tests
+spawn subprocesses (see tests/dist/).
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings(
+    "ignore", message=".*dtype float64 requested.*", category=UserWarning
+)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,211 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+configs, one forward + one train-grad + decode steps on CPU; shape and
+finiteness assertions. Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, all_cells, get_config, get_smoke
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+)
+
+B, S, DS = 2, 16, 8
+
+
+def _batch(cfg, key):
+    batch = {}
+    if cfg.frontend != "none":
+        batch["embeds"] = jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.bfloat16
+        )
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.is_encdec:
+        batch["dec_tokens"] = jax.random.randint(
+            key, (B, DS), 0, cfg.vocab_size
+        )
+        batch["dec_labels"] = jax.random.randint(
+            key, (B, DS), 0, cfg.vocab_size
+        )
+    else:
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name, key):
+    cfg = get_smoke(name)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    out, aux = forward(params, cfg, batch)
+    s_out = DS if cfg.is_encdec else S
+    assert out.shape == (B, s_out, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_grad_finite(name, key):
+    cfg = get_smoke(name)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch)[0]
+    )(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_steps(name, key):
+    cfg = get_smoke(name)
+    params = init_params(key, cfg)
+    state = init_decode_state(params, cfg, B, 32)
+    cross = None
+    if cfg.is_encdec:
+        from repro.models.blocks import apply_stack
+        from repro.models.layers import apply_norm
+        from repro.models.model import _encoder_kv
+
+        x = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+        enc, _ = apply_stack(params["encoder"], x, cfg, pos, causal=False)
+        cross = _encoder_kv(cfg, apply_norm(params["enc_norm"], enc))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        lg, state = decode_step(params, cfg, state, tok, cross_kv=cross)
+        assert lg.shape == (B, 1, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+        tok = jnp.argmax(lg[:, -1:, :], axis=-1).astype(jnp.int32)
+
+
+def test_decode_matches_forward_mamba2():
+    """Recurrent decode must agree with the chunked parallel forward (SSD
+    duality!) on a shared prefix."""
+    cfg = get_smoke("mamba2-2.7b")
+    key = jax.random.PRNGKey(3)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+    out_par, _ = forward(params, cfg, {"tokens": toks})
+    state = init_decode_state(params, cfg, 1, 16)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(params, cfg, state, toks[:, t: t + 1])
+        outs.append(lg[:, 0])
+    out_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(out_par, np.float32),
+        np.asarray(out_seq, np.float32),
+        rtol=0.12, atol=0.12,  # bf16 params, different contraction orders
+    )
+
+
+def test_decode_matches_forward_dense():
+    """KV-cache decode must agree with the causal parallel forward."""
+    cfg = get_smoke("qwen2-1.5b")
+    key = jax.random.PRNGKey(4)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+    out_par, _ = forward(params, cfg, {"tokens": toks})
+    state = init_decode_state(params, cfg, 1, 16)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(params, cfg, state, toks[:, t: t + 1])
+        outs.append(lg[:, 0])
+    out_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(out_par, np.float32),
+        np.asarray(out_seq, np.float32),
+        rtol=0.1, atol=0.1,
+    )
+
+
+def test_published_param_counts():
+    """Full configs must hit the published parameter counts (±6%)."""
+    expected = {
+        "mamba2-2.7b": 2.7e9,
+        "olmoe-1b-7b": 6.9e9,
+        "nemotron-4-340b": 340e9,
+        "deepseek-coder-33b": 33e9,
+        "yi-34b": 34.4e9,
+        "qwen2-1.5b": 1.54e9,
+        "jamba-v0.1-52b": 52e9,
+        "qwen2-vl-72b": 72.7e9,
+    }
+    for name, target in expected.items():
+        n = get_config(name).param_count()
+        assert abs(n - target) / target < 0.06, (name, n, target)
+
+
+def test_active_param_counts_moe():
+    assert abs(get_config("olmoe-1b-7b").active_param_count() - 1.3e9) < 2e8
+    assert (
+        abs(get_config("jamba-v0.1-52b").active_param_count() - 12e9) < 1.5e9
+    )
+
+
+def test_cell_matrix_structure():
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if c[2] is not None]
+    assert len(skips) == 8  # long_500k on the 8 full-attention archs
+    for arch, shape, reason in skips:
+        assert shape == "long_500k"
+        assert arch not in ("mamba2-2.7b", "jamba-v0.1-52b")
+
+
+def test_flash_attention_matches_plain():
+    from repro.models.attention import attention, attention_prefill, init_attn
+
+    cfg = get_smoke("qwen2-vl-72b")
+    key = jax.random.PRNGKey(5)
+    p = init_attn(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(32), (2, 32)).astype(jnp.int32)
+    plain = attention(p, x, cfg, pos)
+    flash, _ = attention_prefill(p, x, cfg, pos, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(
+        np.asarray(plain), np.asarray(flash), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_moe_router_load_balance_loss_positive():
+    from repro.models.moe import apply_moe, init_moe
+
+    cfg = get_smoke("olmoe-1b-7b")
+    key = jax.random.PRNGKey(6)
+    p = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    y, aux = apply_moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz, == 1 balanced
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1 and uniform routing, most tokens survive."""
+    from repro.models.moe import apply_moe, init_moe
+
+    cfg = get_smoke("olmoe-1b-7b")
+    key = jax.random.PRNGKey(7)
+    p = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (4, 32, cfg.d_model), jnp.float32)
+    y, _ = apply_moe(p, x, cfg, capacity_factor=2.0)
+    # a dropped token yields an exactly-zero output row; at cf=2 with a
+    # fresh random router drops should be rare
+    zero_rows = float(
+        jnp.mean(jnp.all(y.reshape(-1, cfg.d_model) == 0, axis=-1))
+    )
+    assert zero_rows < 0.2

@@ -1,0 +1,185 @@
+"""Correctness of every local MTTKRP implementation against the atomic
+N-ary-multiply definition (Definition 2.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocked import mttkrp_blocked
+from repro.core.dimension_tree import all_mode_mttkrp_dimtree, dimtree_als_sweep
+from repro.core.krp import khatri_rao, mttkrp_via_matmul
+from repro.core.mttkrp import mttkrp, mttkrp_naive
+from repro.core.tensor import (
+    dematricize,
+    matricize,
+    tensor_from_factors,
+)
+
+DIMS_3WAY = [(4, 5, 6), (3, 3, 3), (8, 2, 7), (1, 5, 4)]
+DIMS_4WAY = [(3, 4, 5, 2), (2, 2, 2, 2)]
+
+
+def _mk(dims, rank, seed=0, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    kx, *kf = jax.random.split(key, len(dims) + 1)
+    x = jax.random.normal(kx, dims, dtype)
+    fs = [jax.random.normal(k, (d, rank), dtype) for k, d in zip(kf, dims)]
+    return x, fs
+
+
+@pytest.mark.parametrize("dims", DIMS_3WAY + DIMS_4WAY)
+def test_einsum_matches_naive_definition(dims):
+    x, fs = _mk(dims, 4)
+    for mode in range(len(dims)):
+        np.testing.assert_allclose(
+            mttkrp(x, fs, mode),
+            mttkrp_naive(x, fs, mode),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+@pytest.mark.parametrize("dims", DIMS_3WAY + DIMS_4WAY)
+def test_matmul_baseline_matches(dims):
+    x, fs = _mk(dims, 3, seed=1)
+    for mode in range(len(dims)):
+        np.testing.assert_allclose(
+            mttkrp(x, fs, mode),
+            mttkrp_via_matmul(x, fs, mode),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+@pytest.mark.parametrize("dims", DIMS_3WAY)
+@pytest.mark.parametrize("block", [1, 2, 3, 4, 8])
+def test_blocked_matches(dims, block):
+    x, fs = _mk(dims, 5, seed=2)
+    for mode in range(len(dims)):
+        np.testing.assert_allclose(
+            mttkrp_blocked(x, fs, mode, block),
+            mttkrp(x, fs, mode),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+@pytest.mark.parametrize("dims", DIMS_3WAY + DIMS_4WAY)
+def test_dimension_tree_all_modes(dims):
+    x, fs = _mk(dims, 3, seed=3)
+    outs = all_mode_mttkrp_dimtree(x, fs)
+    for mode in range(len(dims)):
+        np.testing.assert_allclose(
+            outs[mode], mttkrp(x, fs, mode), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_dimtree_sweep_gauss_seidel_equivalence():
+    """dimtree_als_sweep must deliver the MTTKRP each plain-ALS mode update
+    would see (modes < n updated, modes >= n not)."""
+    dims = (5, 4, 6, 3)
+    x, fs = _mk(dims, 3, seed=4)
+    fs_plain = [f + 0 for f in fs]
+    seen = {}
+
+    def update(mode, b):
+        seen[mode] = b
+        return fs_plain[mode] * 1.1  # some deterministic update
+
+    fs_tree = [f + 0 for f in fs]
+    dimtree_als_sweep(x, fs_tree, update)
+    # replicate with plain ALS ordering
+    cur = [f + 0 for f in fs]
+    for mode in range(len(dims)):
+        expected = mttkrp(x, cur, mode)
+        np.testing.assert_allclose(seen[mode], expected, rtol=2e-3, atol=2e-3)
+        cur[mode] = cur[mode] * 1.1
+
+
+def test_khatri_rao_column_convention():
+    """matricize(X, n) @ krp(others) == MTTKRP — the orderings must agree."""
+    x, fs = _mk((3, 4, 5), 2, seed=5)
+    for mode in range(3):
+        others = [f for k, f in enumerate(fs) if k != mode]
+        out = matricize(x, mode) @ khatri_rao(others)
+        np.testing.assert_allclose(
+            out, mttkrp(x, fs, mode), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_matricize_roundtrip():
+    x, _ = _mk((3, 4, 5, 2), 2, seed=6)
+    for mode in range(4):
+        np.testing.assert_allclose(
+            dematricize(matricize(x, mode), mode, x.shape), x, rtol=1e-6
+        )
+
+
+def test_mttkrp_of_exact_cp_tensor():
+    """For X = [[A]] exactly, MTTKRP(X) == A_n @ (hadamard of other grams)."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    fs = [jax.random.normal(k, (d, 3)) for k, d in zip(ks, (6, 5, 4))]
+    x = tensor_from_factors(fs)
+    for mode in range(3):
+        gamma = jnp.ones((3, 3))
+        for k in range(3):
+            if k != mode:
+                gamma = gamma * (fs[k].T @ fs[k])
+        np.testing.assert_allclose(
+            mttkrp(x, fs, mode), fs[mode] @ gamma, rtol=2e-3, atol=2e-3
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 6), min_size=2, max_size=4),
+    rank=st.integers(1, 5),
+    mode_seed=st.integers(0, 10_000),
+)
+def test_property_einsum_vs_matmul_any_shape(dims, rank, mode_seed):
+    """Property: all implementations agree for arbitrary small shapes."""
+    dims = tuple(dims)
+    mode = mode_seed % len(dims)
+    x, fs = _mk(dims, rank, seed=mode_seed)
+    a = mttkrp(x, fs, mode)
+    b = mttkrp_via_matmul(x, fs, mode)
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rank=st.integers(1, 4),
+    block=st.integers(1, 5),
+    seed=st.integers(0, 10_000),
+)
+def test_property_blocked_any_block(rank, block, seed):
+    x, fs = _mk((6, 5, 7), rank, seed=seed)
+    mode = seed % 3
+    np.testing.assert_allclose(
+        mttkrp_blocked(x, fs, mode, block),
+        mttkrp(x, fs, mode),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+def test_mttkrp_is_differentiable():
+    x, fs = _mk((4, 5, 6), 3, seed=8)
+
+    def loss(f0):
+        return jnp.sum(mttkrp(x, [f0] + fs[1:], 1) ** 2)
+
+    g = jax.grad(loss)(fs[0])
+    assert g.shape == fs[0].shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_dtypes():
+    for dtype in (jnp.float32, jnp.bfloat16):
+        x, fs = _mk((4, 4, 4), 2, seed=9, dtype=dtype)
+        out = mttkrp(x, fs, 0)
+        assert out.dtype == dtype
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))

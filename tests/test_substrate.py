@@ -1,0 +1,297 @@
+"""Substrate tests: optimizer math, schedules, data determinism/resume,
+checkpoint atomicity/integrity/elastic restore, train loop fault tolerance,
+straggler monitor."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_latest, save_checkpoint
+from repro.checkpoint.manager import list_steps
+from repro.configs import get_smoke
+from repro.data import DataConfig, batch_iterator, synthetic_batch
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import global_norm
+from repro.training import (
+    LoopConfig,
+    TrainLoop,
+    build_train_step,
+    init_train_state,
+)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    params = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([0.5])}
+    grads = {"w": jnp.array([0.1, 0.2, -0.1]), "b": jnp.array([-0.3])}
+    state = adamw_init(params)
+    lr, b1, b2, eps, wd = 0.01, 0.9, 0.95, 1e-8, 0.1
+    new_params, new_state, metrics = adamw_update(
+        params, grads, state, lr, b1=b1, b2=b2, eps=eps, weight_decay=wd,
+        clip_norm=1e9,
+    )
+    # reference numpy implementation
+    for k in params:
+        g = np.asarray(grads[k])
+        m = (1 - b1) * g
+        v = (1 - b2) * g ** 2
+        mh = m / (1 - b1)
+        vh = v / (1 - b2)
+        expect = np.asarray(params[k]) - lr * (
+            mh / (np.sqrt(vh) + eps) + wd * np.asarray(params[k])
+        )
+        np.testing.assert_allclose(np.asarray(new_params[k]), expect,
+                                   rtol=1e-5)
+    assert int(new_state.step) == 1
+
+
+def test_adamw_clipping():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    state = adamw_init(params)
+    _, _, metrics = adamw_update(params, grads, state, 0.1, clip_norm=1.0)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert float(metrics["clip_scale"]) == pytest.approx(1 / 200.0)
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    grads = {"w": jnp.full((8,), 0.25, jnp.bfloat16)}
+    state = adamw_init(params, moment_dtype=jnp.bfloat16)
+    new_params, new_state, _ = adamw_update(params, grads, state, 0.01)
+    assert new_state.m["w"].dtype == jnp.bfloat16
+    assert new_params["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, 1.0, 10, 100)) < 0.2
+    peak = max(float(cosine_schedule(s, 1.0, 10, 100)) for s in range(100))
+    assert peak == pytest.approx(1.0, abs=0.05)
+    assert float(cosine_schedule(99, 1.0, 10, 100)) < 0.2
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4, seed=7)
+    b1 = synthetic_batch(cfg, 5)
+    b2 = synthetic_batch(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    it = batch_iterator(cfg, start_step=5)
+    step, b3 = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_has_learnable_structure():
+    """Bigram chain: the same token is followed by the same successor with
+    probability >= structure."""
+    cfg = DataConfig(vocab_size=50, seq_len=256, global_batch=8, seed=3,
+                     structure=1.0)
+    b = synthetic_batch(cfg, 0)
+    toks = np.asarray(b["tokens"])
+    successors = {}
+    consistent = total = 0
+    for row in toks:
+        for a, bb in zip(row[:-1], row[1:]):
+            if a in successors:
+                total += 1
+                consistent += successors[a] == bb
+            successors[a] = bb
+    assert total > 0 and consistent / total > 0.99
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2, seed=0)
+    b = synthetic_batch(cfg, 1)
+    np.testing.assert_array_equal(
+        np.asarray(b["labels"])[:, :-1], np.asarray(b["tokens"])[:, 1:]
+    )
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+        "step": jnp.asarray(3),
+    }
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as td:
+        tree = _tree()
+        save_checkpoint(td, 3, tree)
+        step, restored = restore_latest(td, tree)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_integrity_check():
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(td, 1, _tree())
+        # corrupt the arrays file
+        path = os.path.join(td, "step_1", "arrays.npz")
+        data = open(path, "rb").read()
+        with open(path, "wb") as f:
+            f.write(data[:len(data) // 2])
+        with pytest.raises(Exception):
+            restore_latest(td, _tree())
+
+
+def test_checkpoint_keep_k_gc():
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _tree())
+        assert list_steps(td) == [3, 4]
+
+
+def test_checkpoint_async_save():
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=3)
+        mgr.save_async(7, _tree())
+        mgr.wait()
+        step, restored = mgr.restore_latest(_tree())
+        assert step == 7
+
+
+def test_atomicity_no_partial_dirs():
+    """A tmp dir left by a crashed save must not be listed as a step."""
+    with tempfile.TemporaryDirectory() as td:
+        os.makedirs(os.path.join(td, "step_9.tmp"))
+        assert list_steps(td) == []
+
+
+def test_elastic_restore_across_meshes():
+    """Save sharded one way, restore re-sharded differently: subprocess
+    creates 8 devices, saves with a (2,4) mesh sharding, restores onto
+    (4,2) and at a different logical axis assignment."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from repro.checkpoint import save_checkpoint, restore_latest
+
+tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+sharded = {"w": jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model")))}
+with tempfile.TemporaryDirectory() as td:
+    save_checkpoint(td, 1, sharded)
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+    spec_tree = {"w": P("model", "data")}
+    step, restored = restore_latest(td, tree, mesh=mesh_b, spec_tree=spec_tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.spec == P("model", "data")
+print("ELASTIC_OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=300, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "ELASTIC_OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# fault-tolerant loop
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from repro.models.sharding import NULL
+
+    cfg = get_smoke("qwen2-1.5b")
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(build_train_step(cfg, NULL))
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    return cfg, state, step, data
+
+
+def test_loop_trains_and_checkpoints(tiny_setup):
+    cfg, state, step, data = tiny_setup
+    with tempfile.TemporaryDirectory() as td:
+        loop = TrainLoop(
+            step, data, LoopConfig(total_steps=8, ckpt_every=4, ckpt_dir=td)
+        )
+        state2, stats = loop.run(state)
+        assert stats.steps_done == 8
+        assert int(state2.step) == 8
+        assert list_steps(td) == [4, 8]
+
+
+def test_loop_recovers_from_failure(tiny_setup):
+    cfg, state, step, data = tiny_setup
+    with tempfile.TemporaryDirectory() as td:
+        crashed = {"n": 0}
+
+        def fail(s):
+            if s == 6 and crashed["n"] == 0:
+                crashed["n"] = 1
+                raise RuntimeError("injected node failure")
+
+        loop = TrainLoop(
+            step, data, LoopConfig(total_steps=10, ckpt_every=5, ckpt_dir=td)
+        )
+        state2, stats = loop.run(state, fail_injector=fail)
+        assert stats.restarts == 1
+        assert int(state2.step) == 10  # resumed from step-5 ckpt, finished
+
+
+def test_loop_gives_up_after_max_restarts(tiny_setup):
+    cfg, state, step, data = tiny_setup
+    with tempfile.TemporaryDirectory() as td:
+        def always_fail(s):
+            raise RuntimeError("hard failure")
+
+        loop = TrainLoop(
+            step, data,
+            LoopConfig(total_steps=4, ckpt_every=2, ckpt_dir=td,
+                       max_restarts=2),
+        )
+        with pytest.raises(RuntimeError):
+            loop.run(state, fail_injector=always_fail)
+        assert loop.stats.restarts == 3  # 2 allowed + the final raise
+
+
+def test_loop_resumes_across_instances(tiny_setup):
+    """Simulates full job restart: a NEW loop (new process semantics) picks
+    up from the surviving checkpoint."""
+    cfg, state, step, data = tiny_setup
+    with tempfile.TemporaryDirectory() as td:
+        loop1 = TrainLoop(
+            step, data, LoopConfig(total_steps=6, ckpt_every=3, ckpt_dir=td)
+        )
+        loop1.run(state)
+        loop2 = TrainLoop(
+            step, data, LoopConfig(total_steps=9, ckpt_every=3, ckpt_dir=td)
+        )
+        state2, stats2 = loop2.run(state)
+        assert int(state2.step) == 9
+        assert stats2.steps_done == 3  # only 6->9 executed
