@@ -3,6 +3,8 @@
 interpret-mode correctness timing vs the jnp oracle, plus the kernel's
 modeled HBM traffic against the paper's Eq (10) and the tensor-size floor
 (this container is CPU-only; on TPU the same harness reports wall time).
+All planning/traffic numbers come from the engine planner — the same
+BlockPlan object the kernel executes.
 """
 
 from __future__ import annotations
@@ -12,10 +14,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bounds
-from repro.kernels.ops import choose_blocks, mttkrp_pallas, mttkrp_traffic_model
+from repro.engine import choose_blocks, mttkrp
 from repro.kernels.ref import mttkrp_ref
 
 CASES = [
@@ -36,13 +37,13 @@ def rows() -> list[tuple[str, float, str]]:
             for k, d in zip(kf, dims)
         ]
         t0 = time.perf_counter()
-        got = mttkrp_pallas(x, fs, 0, interpret=True)
+        got = mttkrp(x, fs, 0, backend="pallas", interpret=True)
         jax.block_until_ready(got)
         dt = (time.perf_counter() - t0) * 1e6
         ref = mttkrp_ref(x, fs, 0)
         err = float(jnp.max(jnp.abs(got - ref)))
         plan = choose_blocks(dims, rank)
-        traffic = mttkrp_traffic_model(dims, rank, plan)
+        traffic = plan.traffic_model(dims, rank)
         tensor_bytes = math.prod(dims) * 4
         # paper ideal for VMEM-sized fast memory
         m_words = 8 * 2 ** 20 // 4
@@ -52,7 +53,8 @@ def rows() -> list[tuple[str, float, str]]:
             f"maxerr={err:.2e};plan={plan.block_i}x"
             f"{'x'.join(map(str, plan.block_contract))}xR{plan.block_r};"
             f"modeled_bytes={traffic['total_bytes']};"
-            f"tensor_bytes={tensor_bytes};"
+            f"eq10_bytes={traffic['eq10_bytes']};"
+            f"tensor_bytes={tensor_bytes};lb_bytes={lb:.0f};"
             f"traffic/tensor={traffic['total_bytes'] / tensor_bytes:.2f}"
         )
         out.append((name, dt, derived))

@@ -13,6 +13,7 @@ MODULES = (
     "seq_vs_matmul",    # §VI-A: Alg 2 vs matmul-baseline regimes
     "par_comm",         # §VI-B + Thm 6.2: Alg 3/4 vs Cor 4.2 vs matmul
     "cp_als",           # §VII: dimension-tree reuse + CP-ALS e2e
+    "all_mode",         # engine: dimtree vs independent all-mode MTTKRP
     "kernel_mttkrp",    # Pallas Alg-2 kernel: correctness + traffic model
     "lm_step",          # §Roofline: per-cell terms from the dry-run
 )
@@ -20,6 +21,14 @@ MODULES = (
 
 def main() -> None:
     want = set(sys.argv[1:]) or set(MODULES)
+    unknown = want - set(MODULES)
+    if unknown:
+        print(
+            f"unknown benchmark module(s): {sorted(unknown)}; "
+            f"available: {list(MODULES)}",
+            file=sys.stderr,
+        )
+        sys.exit(2)
     print("name,us_per_call,derived")
     for modname in MODULES:
         if modname not in want:

@@ -13,7 +13,8 @@ import time
 import numpy as np
 
 from repro.core import bounds
-from repro.core.simulator import simulate_blocked, simulate_unblocked
+from repro.core.simulator import simulate_blocked
+from repro.engine.plan import Memory, best_uniform_block
 
 CASES = [
     # (dims, rank, mem)
@@ -31,7 +32,7 @@ def rows() -> list[tuple[str, float, str]]:
     for dims, rank, mem in CASES:
         x = rng.standard_normal(dims)
         fs = [rng.standard_normal((d, rank)) for d in dims]
-        b = bounds.best_block_size(dims, mem)
+        b = best_uniform_block(dims, Memory.abstract(mem))
 
         t0 = time.perf_counter()
         blocked = simulate_blocked(x, fs, 0, mem, b)

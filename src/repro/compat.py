@@ -1,0 +1,59 @@
+"""Version-tolerant shims for jax APIs that moved between releases.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``)
+but must also run on the 0.4.x jaxlib baked into the validation container,
+where ``shard_map`` still lives in ``jax.experimental`` and meshes have no
+``axis_types``. All mesh/shard_map construction goes through here.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SHARD_MAP_HAS_CHECK_REP = False
+else:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_HAS_CHECK_REP = True
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
+    """``shard_map`` across jax versions.
+
+    ``check_rep=False`` is needed on 0.4.x for bodies containing primitives
+    whose replication rules are incomplete there (e.g. ``linalg.solve``);
+    newer jax has no such knob and needs none.
+    """
+    if _SHARD_MAP_HAS_CHECK_REP:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_rep,
+        )
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions
+    (older releases return a one-element list of per-device dicts)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(
+            tuple(shape), tuple(names), axis_types=(AxisType.Auto,) * len(names)
+        )
+    return jax.make_mesh(tuple(shape), tuple(names))

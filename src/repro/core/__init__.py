@@ -8,10 +8,11 @@ from .mttkrp import mttkrp, mttkrp_naive, mttkrp_all_modes
 from .krp import khatri_rao, mttkrp_via_matmul
 from .blocked import mttkrp_blocked
 from .cp_als import cp_als, cp_gradient, CPResult
-from .dimension_tree import all_mode_mttkrp_dimtree
+from .dimension_tree import all_mode_mttkrp_dimtree, dimtree_als_sweep
 from . import bounds, grid, simulator, tensor
 
 __all__ = [
+    "dimtree_als_sweep",
     "mttkrp",
     "mttkrp_naive",
     "mttkrp_all_modes",

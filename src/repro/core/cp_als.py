@@ -18,15 +18,16 @@ so the full tensor is reconstructed only implicitly.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Callable, Sequence
+from typing import TYPE_CHECKING, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from .mttkrp import mttkrp
-from .dimension_tree import dimtree_als_sweep
 from .tensor import frob_norm, random_factors
+
+if TYPE_CHECKING:  # engine imports stay call-time-only (core <-> engine cycle)
+    from ..engine.plan import Memory
 
 MttkrpFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
 
@@ -70,12 +71,20 @@ def cp_als(
     n_iters: int = 20,
     key: jax.Array | None = None,
     init_factors: Sequence[jax.Array] | None = None,
-    mttkrp_fn: MttkrpFn = mttkrp,
+    mttkrp_fn: MttkrpFn | None = None,
     use_dimension_tree: bool = False,
     tol: float = 0.0,
+    backend: str = "einsum",
+    memory: "Memory | None" = None,
+    interpret: bool | None = None,
 ) -> CPResult:
     """CP-ALS. One sweep = for each mode n: B = MTTKRP; solve the normal
-    equations A_n = B (Γ_n)^+; column-normalize into weights λ."""
+    equations A_n = B (Γ_n)^+; column-normalize into weights λ.
+
+    Every MTTKRP goes through the engine: ``backend`` selects einsum /
+    blocked_host / pallas for both the plain per-mode path and the
+    dimension-tree sweep. A custom ``mttkrp_fn`` (e.g. a distributed Alg
+    3/4 shard_map callable) overrides the engine for the plain path."""
     n = x.ndim
     if init_factors is not None:
         factors = [jnp.asarray(f) for f in init_factors]
@@ -109,9 +118,22 @@ def cp_als(
         state.update(b_last=b, a_last=a_new * weights, g_last=mode)
         return a_new
 
+    from ..engine import execute as engine_execute
+    from ..engine.tree import dimtree_als_sweep
+
+    if mttkrp_fn is None:
+        def mttkrp_fn(t, fs, mode):
+            return engine_execute.mttkrp(
+                t, fs, mode, backend=backend, memory=memory,
+                interpret=interpret,
+            )
+
     for it in range(n_iters):
         if use_dimension_tree:
-            dimtree_als_sweep(x, factors, update)
+            dimtree_als_sweep(
+                x, factors, update, backend=backend, memory=memory,
+                interpret=interpret,
+            )
         else:
             for mode in range(n):
                 factors[mode] = update(mode, mttkrp_fn(x, factors, mode))

@@ -1,139 +1,135 @@
 """Dimension-tree multi-mode MTTKRP (paper §VII outlook; Phan et al. [13]).
 
 CP-ALS needs the MTTKRP in *every* mode each sweep. Computing them
-independently costs N separate O(N·I·R) contractions; a dimension tree
-shares partial contractions: split the mode set in half, contract the tensor
-once with each half's factors, and recurse. Asymptotically ~2 tensor-sized
-contractions per sweep instead of N, with the same communication pattern per
-contraction (each partial contraction is itself MTTKRP-like and is blocked /
-distributed by the same machinery).
+independently costs N separate O(N*I*R) contractions; a dimension tree
+shares partial contractions: split the mode set in half, contract the
+tensor once with each half's factors, and recurse. Asymptotically ~2
+tensor-sized contractions per sweep instead of N, with the same
+communication pattern per contraction (each partial contraction is itself
+MTTKRP-like and is blocked / distributed by the same machinery).
+
+The tree execution lives in :mod:`repro.engine.tree` — each partial
+contraction is planned and dispatched through the engine's backends
+(einsum or the blocked Pallas kernels). This module keeps the historical
+entry points plus the analytic flop models.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import jax
-import jax.numpy as jnp
 
-_L = "abcdefghijklmnopqrstuvw"
-_RANK = "z"
+if TYPE_CHECKING:  # engine imports stay call-time-only (core <-> engine cycle)
+    from ..engine.plan import Memory
 
 
 def all_mode_mttkrp_dimtree(
-    x: jax.Array, factors: Sequence[jax.Array]
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    *,
+    backend: str = "einsum",
+    memory: "Memory | None" = None,
+    interpret: bool | None = None,
 ) -> list[jax.Array]:
     """All-mode MTTKRP via a binary dimension tree.
 
     Returns ``[B^(0), ..., B^(N-1)]`` identical (up to roundoff) to
     ``[mttkrp(x, factors, n) for n in range(N)]`` with ~half the flops for
-    N=3,4 and asymptotically fewer for larger N.
+    N=3,4 and asymptotically fewer for larger N. ``backend='pallas'`` runs
+    every partial contraction on the blocked kernels.
     """
-    n = x.ndim
-    results: Dict[int, jax.Array] = {}
+    from ..engine.tree import all_mode_mttkrp
 
-    def contract(node, modes, drop, has_rank):
-        sub_in = "".join(_L[m] for m in modes) + (_RANK if has_rank else "")
-        ops = [node]
-        subs = [sub_in]
-        for m in drop:
-            ops.append(factors[m])
-            subs.append(_L[m] + _RANK)
-        keep = tuple(m for m in modes if m not in drop)
-        sub_out = "".join(_L[m] for m in keep) + _RANK
-        return jnp.einsum(",".join(subs) + "->" + sub_out, *ops,
-                          optimize="optimal")
-
-    def solve(node, modes, has_rank):
-        if len(modes) == 1:
-            results[modes[0]] = node
-            return
-        half = max(1, len(modes) // 2)
-        left, right = modes[:half], modes[half:]
-        solve(contract(node, modes, right, has_rank), left, True)
-        solve(contract(node, modes, left, has_rank), right, True)
-
-    solve(x, tuple(range(n)), False)
-    return [results[m] for m in range(n)]
+    return all_mode_mttkrp(
+        x, factors, method="dimtree", backend=backend, memory=memory,
+        interpret=interpret,
+    )
 
 
 def dimtree_als_sweep(
     x: jax.Array,
     factors: list[jax.Array],
     update_fn,
+    *,
+    backend: str = "einsum",
+    memory: "Memory | None" = None,
+    interpret: bool | None = None,
 ) -> None:
     """One ALS sweep with dimension-tree reuse, *exactly* matching the
-    Gauss-Seidel order of plain ALS.
+    Gauss-Seidel order of plain ALS (see :mod:`repro.engine.tree` for the
+    ordering argument). ``factors`` is updated in place."""
+    from ..engine.tree import dimtree_als_sweep as engine_sweep
 
-    ``update_fn(mode, b)`` receives the MTTKRP result for ``mode`` computed
-    with all modes < mode already updated, must return the new factor, and
-    may maintain its own side state (grams, weights). ``factors`` is updated
-    in place. Key ordering property: a node's partial for its *left* child is
-    contracted with right-child factors (not yet updated — correct), and the
-    partial for its *right* child is contracted with left-child factors
-    *after* they were updated — so every leaf sees exactly the factors plain
-    ALS would use, while sharing the upper-tree contractions.
-    """
-
-    def contract(node, modes, drop, has_rank):
-        sub_in = "".join(_L[m] for m in modes) + (_RANK if has_rank else "")
-        ops, subs = [node], [sub_in]
-        for m in drop:
-            ops.append(factors[m])
-            subs.append(_L[m] + _RANK)
-        keep = tuple(m for m in modes if m not in drop)
-        sub_out = "".join(_L[m] for m in keep) + _RANK
-        return jnp.einsum(",".join(subs) + "->" + sub_out, *ops,
-                          optimize="optimal")
-
-    def solve(node, modes, has_rank):
-        if len(modes) == 1:
-            mode = modes[0]
-            factors[mode] = update_fn(mode, node)
-            return
-        half = max(1, len(modes) // 2)
-        left, right = modes[:half], modes[half:]
-        solve(contract(node, modes, right, has_rank), left, True)
-        solve(contract(node, modes, left, has_rank), right, True)
-
-    solve(x, tuple(range(x.ndim)), False)
+    engine_sweep(
+        x, factors, update_fn, backend=backend, memory=memory,
+        interpret=interpret,
+    )
 
 
 def dimtree_flops(dims: Sequence[int], rank: int) -> int:
-    """Modeled multiply-add count of one dimension-tree sweep.
+    """Exact multiply-add count of one dimension-tree sweep.
 
-    Each contract-away of modes D from a node of volume V (pairing the
-    factors one at a time, rank-R throughout) costs sum of intermediate
-    volumes; we count the dominant first-step term V*R per dropped factor
-    applied to the shrinking node. Compare against naive all-mode MTTKRP:
-    N * (N-1) * I * R multiply-adds.
+    Each einsum contraction pairs the dropped factors one at a time; a
+    pairing that drops mode ``m`` from a node with remaining mode sizes
+    ``cur`` costs ``prod(cur) * R`` multiply-adds (every surviving
+    element-and-rank pair sums over ``m``) — whether the rank axis is
+    already materialized on the node (elementwise along r) or appears with
+    this first pairing. Volumes shrink *exactly* per the dims dropped, not
+    by a geometric-mean model. Compare against naive all-mode MTTKRP:
+    ``N * (N-1) * I * R`` multiply-adds.
     """
     total = 0
 
-    def contract_cost(sizes: tuple[int, ...], drop_count: int, has_rank: bool) -> int:
+    def contract_cost(sizes: tuple[int, ...], drop: tuple[int, ...]) -> int:
+        # `sizes` are the node's mode sizes in order; `drop` indexes into
+        # it. Each pairing costs prod(remaining)*R multiply-adds regardless
+        # of whether the rank axis is already materialized; the drop ORDER
+        # does matter, and einsum's 'optimal' path drops the largest mode
+        # first (shrinking the node fastest minimizes the rest).
         cost = 0
-        vol = 1
-        for s in sizes:
-            vol *= s
-        # drop factors one at a time; node volume shrinks after each
-        for _ in range(drop_count):
+        cur = list(sizes)
+        for s in sorted((sizes[m] for m in drop), reverse=True):
+            vol = 1
+            for c in cur:
+                vol *= c
             cost += vol * rank
-            # dropping one mode divides volume by that mode's size; use the
-            # geometric mean as the model (exact per-order cost is computed
-            # by XLA; this model is for the reuse ratio benchmark)
-            vol = int(vol ** ((len(sizes) - 1) / len(sizes))) if len(sizes) > 1 else vol
+            cur.remove(s)
         return cost
 
-    def rec(sizes: tuple[int, ...], has_rank: bool):
+    def rec(sizes: tuple[int, ...]):
         nonlocal total
         if len(sizes) == 1:
             return
         half = max(1, len(sizes) // 2)
-        left, right = sizes[:half], sizes[half:]
-        total += contract_cost(sizes, len(right), has_rank)
-        total += contract_cost(sizes, len(left), has_rank)
-        rec(left, True)
-        rec(right, True)
+        total += contract_cost(sizes, tuple(range(half, len(sizes))))
+        total += contract_cost(sizes, tuple(range(half)))
+        rec(sizes[:half])
+        rec(sizes[half:])
+
+    rec(tuple(dims))
+    return total
+
+
+def dimtree_intermediate_words(dims: Sequence[int], rank: int) -> int:
+    """Total words of every internal tree node (the reuse working set).
+
+    Rank-augmented nodes hold ``prod(dims) * R`` words — the quantity the
+    old geometric-mean model under-counted; the root holds ``prod(dims)``.
+    """
+    total = 0
+
+    def rec(sizes: tuple[int, ...], has_rank: bool):
+        nonlocal total
+        vol = 1
+        for s in sizes:
+            vol *= s
+        total += vol * (rank if has_rank else 1)
+        if len(sizes) == 1:
+            return
+        half = max(1, len(sizes) // 2)
+        rec(sizes[:half], True)
+        rec(sizes[half:], True)
 
     rec(tuple(dims), False)
     return total

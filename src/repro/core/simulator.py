@@ -18,13 +18,11 @@ implies; the counters are word-exact (edge blocks counted at true size).
 from __future__ import annotations
 
 import itertools
-import math
 from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
 
-from .bounds import best_block_size, blocked_feasible_b
 
 
 @dataclass
@@ -113,9 +111,14 @@ def simulate_blocked(
     n = x.ndim
     dims = x.shape
     rank = next(f.shape[1] for k, f in enumerate(factors) if k != mode)
+    # block selection goes through the engine planner (call-time import:
+    # core <-> engine cycle)
+    from ..engine.plan import Memory, best_uniform_block, uniform_block_feasible
+
+    fast = Memory.abstract(mem)
     if block is None:
-        block = best_block_size(dims, mem)
-    if not blocked_feasible_b(n, block, mem):
+        block = best_uniform_block(dims, fast)
+    if not uniform_block_feasible(n, block, fast):
         raise ValueError(f"block {block} infeasible for M={mem} (Eq 9)")
     fm = _FastMemory(mem)
     out = np.zeros((dims[mode], rank), dtype=np.float64)

@@ -2,6 +2,7 @@
 
 from .mesh import make_grid_mesh, mode_axis, hyperslice_axes
 from .mttkrp_parallel import (
+    engine_local_fn,
     mttkrp_stationary,
     mttkrp_general,
     place_inputs,
@@ -15,6 +16,7 @@ __all__ = [
     "make_grid_mesh",
     "mode_axis",
     "hyperslice_axes",
+    "engine_local_fn",
     "mttkrp_stationary",
     "mttkrp_general",
     "place_inputs",

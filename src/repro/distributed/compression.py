@@ -57,11 +57,22 @@ def pick_3way_shape(shape: Sequence[int]) -> tuple[int, int, int]:
 
 def init_factors(key: jax.Array, dims: Sequence[int], rank: int,
                  dtype=jnp.float32) -> list[jax.Array]:
+    """Orthonormal-column random init (QR of a Gaussian draw).
+
+    Correlated random columns can strand ALS in a rank-deficient local
+    minimum; orthonormal starts are the standard guard. Deterministic in
+    ``key`` so every DP worker initializes identically without a broadcast.
+    """
     ks = jax.random.split(key, len(dims))
-    return [
-        jax.random.normal(k, (d, rank), dtype) / jnp.sqrt(rank)
-        for k, d in zip(ks, dims)
-    ]
+    out = []
+    for k, d in zip(ks, dims):
+        g = jax.random.normal(k, (d, rank), dtype)
+        if d >= rank:
+            q, _ = jnp.linalg.qr(g)
+            out.append(q.astype(dtype))
+        else:  # fewer rows than columns: normalize instead
+            out.append(g / jnp.linalg.norm(g, axis=0, keepdims=True))
+    return out
 
 
 def _solve_mode(b: jax.Array, grams: list[jax.Array], mode: int,

@@ -12,7 +12,8 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import make_mesh
 
 
 def mode_axis(k: int) -> str:
@@ -25,9 +26,7 @@ def make_grid_mesh(grid: Sequence[int], p0: int = 1) -> jax.sharding.Mesh:
     names = tuple(mode_axis(k) for k in range(len(grid)))
     if p0 != 1:
         names = ("r",) + names
-    return jax.make_mesh(
-        shape, names, axis_types=(AxisType.Auto,) * len(names)
-    )
+    return make_mesh(shape, names)
 
 
 def hyperslice_axes(ndim: int, k: int, with_rank_axis: bool = False) -> tuple[str, ...]:

@@ -28,13 +28,33 @@ import functools
 from typing import Callable, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.mttkrp import mttkrp as local_mttkrp
+from ..compat import shard_map
 from .mesh import hyperslice_axes, mode_axis, row_sharding_axes
 
 LocalFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
+
+
+def engine_local_fn(
+    backend: str = "einsum", interpret: bool | None = None
+) -> LocalFn:
+    """Per-processor MTTKRP through the engine's dispatch layer.
+
+    This is the paper's separation of concerns made literal: Algorithms 3/4
+    own the collectives; the *local* MTTKRP inside each shard is exactly the
+    sequential problem, so it runs through the same engine (and, with
+    ``backend='pallas'``, the same blocked VMEM kernels) as the
+    single-device path.
+    """
+    from ..engine import execute as engine_execute  # call-time: layer cycle
+
+    def fn(x, factors, mode):
+        return engine_execute.mttkrp(
+            x, factors, mode, backend=backend, interpret=interpret
+        )
+
+    return fn
 
 
 # --------------------------------------------------------------------------
@@ -99,13 +119,23 @@ def mttkrp_stationary(
     mesh: jax.sharding.Mesh,
     mode: int,
     ndim: int,
-    local_fn: LocalFn = local_mttkrp,
+    local_fn: LocalFn | None = None,
+    *,
+    backend: str = "einsum",
+    interpret: bool | None = None,
 ):
     """Build the Alg-3 shard_map callable ``f(x, *factors_except_mode)``.
 
     The tensor never moves (stationary); only factor blocks are gathered and
-    partial outputs reduce-scattered — per-processor volume Eq (12).
+    partial outputs reduce-scattered — per-processor volume Eq (12). The
+    local MTTKRP goes through the engine (``backend`` selects einsum /
+    blocked_host / pallas); an explicit ``local_fn`` overrides it.
     """
+    # pallas_call has no shard_map replication rule on older jax; skip the
+    # (purely diagnostic) rep check when the local body contains a kernel
+    check_rep = backend != "pallas"
+    if local_fn is None:
+        local_fn = engine_local_fn(backend, interpret)
     in_specs = (tensor_spec(ndim),) + tuple(
         factor_spec(ndim, k) for k in range(ndim) if k != mode
     )
@@ -117,11 +147,12 @@ def mttkrp_stationary(
         return fn(x, f_locs)
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             wrapper,
             mesh=mesh,
             in_specs=in_specs,
             out_specs=output_spec(ndim, mode),
+            check_rep=check_rep,
         )
     )
 
@@ -164,13 +195,20 @@ def mttkrp_general(
     mesh: jax.sharding.Mesh,
     mode: int,
     ndim: int,
-    local_fn: LocalFn = local_mttkrp,
+    local_fn: LocalFn | None = None,
+    *,
+    backend: str = "einsum",
+    interpret: bool | None = None,
 ):
     """Build the Alg-4 shard_map callable ``f(x, *factors_except_mode)``.
 
     Requires a mesh with a leading 'r' axis (make_grid_mesh(grid, p0)).
     Alg 3 is the special case p0 == 1 (the 'r' collectives degenerate).
+    The local MTTKRP goes through the engine like :func:`mttkrp_stationary`.
     """
+    check_rep = backend != "pallas"
+    if local_fn is None:
+        local_fn = engine_local_fn(backend, interpret)
     in_specs = (tensor_spec(ndim, rank_split_mode=0),) + tuple(
         factor_spec(ndim, k, rank_axis=True)
         for k in range(ndim)
@@ -184,11 +222,12 @@ def mttkrp_general(
         return fn(x, f_locs)
 
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             wrapper,
             mesh=mesh,
             in_specs=in_specs,
             out_specs=output_spec(ndim, mode, rank_axis=True),
+            check_rep=check_rep,
         )
     )
 

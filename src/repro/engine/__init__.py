@@ -1,0 +1,47 @@
+"""Unified MTTKRP execution engine.
+
+One planner (``plan``), one dispatch layer (``execute``), and the
+kernel-backed dimension tree (``tree``). Every consumer — the Pallas kernel
+wrappers, the two-level-memory simulator, CP-ALS, the shard_map parallel
+algorithms, and the benchmarks — quotes blocking decisions and traffic
+numbers from the same :class:`~repro.engine.plan.BlockPlan` objects.
+
+Layering (see docs/ARCHITECTURE.md):
+
+    plan      — Memory descriptors, BlockPlan, choose_blocks, Eq 9/10 models
+    execute   — mttkrp(x, factors, mode, backend=...) + partial contractions
+    tree      — all-mode MTTKRP / ALS sweeps over a binary dimension tree
+"""
+
+from .plan import (
+    LANE,
+    SUBLANE,
+    VMEM_BUDGET,
+    VMEM_BYTES,
+    BlockPlan,
+    Memory,
+    best_uniform_block,
+    choose_blocks,
+    mttkrp_traffic_model,
+    uniform_block_feasible,
+)
+from .execute import mttkrp, contract_partial, pallas_dispatch_count
+from .tree import all_mode_mttkrp, dimtree_als_sweep
+
+__all__ = [
+    "LANE",
+    "SUBLANE",
+    "VMEM_BUDGET",
+    "VMEM_BYTES",
+    "BlockPlan",
+    "Memory",
+    "best_uniform_block",
+    "choose_blocks",
+    "mttkrp_traffic_model",
+    "uniform_block_feasible",
+    "mttkrp",
+    "contract_partial",
+    "pallas_dispatch_count",
+    "all_mode_mttkrp",
+    "dimtree_als_sweep",
+]

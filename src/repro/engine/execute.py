@@ -1,0 +1,187 @@
+"""The dispatch layer: one ``mttkrp`` entry point over three backends.
+
+Backends
+--------
+``einsum``        — XLA's contraction (production default off-TPU).
+``blocked_host``  — Algorithm 2's blocked schedule expressed as a host-level
+                    reshape-einsum (:mod:`repro.core.blocked`); the
+                    mid-level oracle for the kernels.
+``pallas``        — the blocked VMEM/MXU kernels (Algorithm 2 on TPU),
+                    planned by :mod:`repro.engine.plan`.
+
+:func:`contract_partial` is the engine's generalized contraction: any
+dimension-tree node (tensor x a subset of factors, optionally carrying the
+rank axis) is flattened to canonical form, planned, and dispatched through
+the same backends — this is what lets the all-mode sweep run kernel-backed.
+
+The kernel imports are lazy: ``kernels.ops`` imports the planner from this
+package, so importing kernels first must not re-enter ``engine``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.blocked import mttkrp_blocked
+from ..core.mttkrp import mttkrp as _einsum_mttkrp
+from .plan import BlockPlan, Memory, best_uniform_block, choose_blocks
+
+BACKENDS = ("einsum", "blocked_host", "pallas")
+
+_L = "abcdefghijklmnopqrstuvw"
+_RANK = "z"
+
+# instrumentation: how many contractions were dispatched to the Pallas
+# kernels (tests assert the kernel path is actually taken)
+_pallas_dispatches = 0
+
+
+def pallas_dispatch_count() -> int:
+    return _pallas_dispatches
+
+
+def _count_pallas() -> None:
+    global _pallas_dispatches
+    _pallas_dispatches += 1
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}"
+        )
+
+
+def mttkrp(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    backend: str = "einsum",
+    plan: BlockPlan | None = None,
+    memory: Memory | None = None,
+    block: int | None = None,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """MTTKRP through the engine: ``B^(mode)(i, r)``.
+
+    ``plan`` pins explicit block sizes for the ``pallas`` backend;
+    ``memory`` makes the planner target a non-default budget; ``block``
+    sets the uniform host-blocking size for ``blocked_host`` (defaults to
+    the Eq-9 optimum for an abstract VMEM-word memory).
+    """
+    _check_backend(backend)
+    if backend == "einsum":
+        out = _einsum_mttkrp(x, factors, mode)
+        return out.astype(out_dtype) if out_dtype is not None else out
+    if backend == "blocked_host":
+        if block is None:
+            mem = memory or Memory.abstract(2 ** 20)
+            block = best_uniform_block(x.shape, mem)
+        out = mttkrp_blocked(x, factors, mode, block)
+        return out.astype(out_dtype) if out_dtype is not None else out
+    # pallas
+    if x.ndim < 3:  # the kernels need >= 2 contraction dims
+        out = _einsum_mttkrp(x, factors, mode)
+        return out.astype(out_dtype) if out_dtype is not None else out
+    from ..kernels import ops as kernel_ops  # lazy: avoids import cycle
+
+    if plan is None and memory is not None:
+        perm_shape = (x.shape[mode],) + tuple(
+            s for k, s in enumerate(x.shape) if k != mode
+        )
+        rank = next(
+            f.shape[1] for k, f in enumerate(factors) if k != mode
+        )
+        plan = choose_blocks(
+            perm_shape, rank, x.dtype.itemsize, memory=memory
+        )
+    _count_pallas()
+    return kernel_ops.mttkrp_pallas(
+        x, factors, mode, plan=plan, interpret=interpret,
+        out_dtype=out_dtype,
+    )
+
+
+def contract_partial(
+    node: jax.Array,
+    factors: Sequence[jax.Array],
+    modes: Sequence[int],
+    drop: Sequence[int],
+    has_rank: bool,
+    *,
+    backend: str = "einsum",
+    memory: Memory | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Contract the factors for ``drop`` out of a dimension-tree ``node``.
+
+    ``node`` carries tensor modes ``modes`` (in axis order) plus a trailing
+    rank axis when ``has_rank``; ``factors`` is the full factor list indexed
+    by mode. Returns the node for ``keep = modes - drop`` (rank axis last).
+
+    Every such contraction is MTTKRP-shaped: kept modes flatten into the
+    output axis, dropped modes are the contraction dims, and the dropped
+    factors' Khatri-Rao structure is the weight. The ``pallas`` backend
+    plans each one against the memory descriptor and dispatches the blocked
+    kernels (the N-way generic kernel when the node has no rank axis yet,
+    the rank-augmented partial kernel otherwise).
+    """
+    _check_backend(backend)
+    modes = tuple(modes)
+    drop = tuple(drop)
+    keep = tuple(m for m in modes if m not in drop)
+    if backend != "pallas":
+        # Algorithm 2's schedule matters only below the einsum boundary
+        # here; blocked_host partials fall back to einsum (the host-blocked
+        # oracle exists for the full MTTKRP path).
+        sub_in = "".join(_L[m] for m in modes) + (_RANK if has_rank else "")
+        ops = [node]
+        subs = [sub_in]
+        for m in drop:
+            ops.append(factors[m])
+            subs.append(_L[m] + _RANK)
+        sub_out = "".join(_L[m] for m in keep) + _RANK
+        return jnp.einsum(
+            ",".join(subs) + "->" + sub_out, *ops, optimize="optimal"
+        )
+
+    from ..kernels import ops as kernel_ops  # lazy: avoids import cycle
+
+    rank = factors[drop[0]].shape[1]
+    pos = {m: i for i, m in enumerate(modes)}
+    keep_sizes = tuple(node.shape[pos[m]] for m in keep)
+    drop_sizes = tuple(node.shape[pos[m]] for m in drop)
+    # canonicalize: kept modes first (flattened), dropped modes next,
+    # rank axis last
+    perm = tuple(pos[m] for m in keep) + tuple(pos[m] for m in drop)
+    if has_rank:
+        perm = perm + (node.ndim - 1,)
+    xp = jnp.transpose(node, perm)
+    i_rows = math.prod(keep_sizes) if keep_sizes else 1
+    fs = [factors[m] for m in drop]
+    itemsize = node.dtype.itemsize
+    _count_pallas()
+    if has_rank:
+        xp = xp.reshape((i_rows,) + drop_sizes + (rank,))
+        plan = choose_blocks(
+            (i_rows,) + drop_sizes, rank, itemsize, memory=memory,
+            x_has_rank=True,
+        ) if memory is not None else None
+        out = kernel_ops.mttkrp_partial_canonical_pallas(
+            xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
+        )
+    else:
+        xp = xp.reshape((i_rows,) + drop_sizes)
+        plan = choose_blocks(
+            xp.shape, rank, itemsize, memory=memory
+        ) if memory is not None else None
+        out = kernel_ops.mttkrp_canonical_pallas(
+            xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
+        )
+    return out.reshape(keep_sizes + (rank,))

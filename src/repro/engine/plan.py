@@ -1,0 +1,275 @@
+"""The planner: one source of truth for MTTKRP blocking and traffic models.
+
+Everything the paper derives about *how to block* lives here:
+
+  * :class:`Memory` — an explicit two-level-memory descriptor (capacity,
+    lane/sublane alignment, itemsize). ``Memory.tpu_vmem()`` is the VMEM of
+    the Pallas kernels; ``Memory.abstract(M)`` is the paper's §II-C abstract
+    M-word fast memory (no alignment), used by the simulator.
+  * :class:`BlockPlan` — block sizes for one contraction, with the Eq-9
+    working-set check and the Eq-10 traffic model as *methods*, so the
+    kernel wrapper, the simulator, and the benchmarks all quote the same
+    numbers from the same object.
+  * :func:`choose_blocks` — TPU-aligned block selection against a Memory
+    budget (the paper's b ~ (alpha*M)^{1/N} with MXU/VPU alignment floors).
+    ``x_has_rank=True`` plans the dimension tree's rank-augmented partial
+    contractions, whose tensor tile carries an extra rank axis.
+  * :func:`best_uniform_block` / :func:`uniform_block_feasible` — the
+    paper's exact uniform-b selection (Eq 9), re-exported for the simulator
+    so block selection has a single import path.
+
+Formula provenance stays in :mod:`repro.core.bounds` (the pure equation
+library); this module is the only place that turns those equations into
+decisions.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+from ..core.bounds import best_block_size, blocked_feasible_b, seq_blocked_cost
+
+LANE = 128
+SUBLANE = 8
+VMEM_BYTES = 16 * 2 ** 20  # v5e per-core VMEM
+VMEM_BUDGET = VMEM_BYTES // 2  # leave headroom for double-buffering
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class Memory:
+    """Two-level fast-memory descriptor the planner blocks against."""
+
+    budget_bytes: int
+    lane: int = 1
+    sublane: int = 1
+    itemsize: int = 4
+
+    @classmethod
+    def tpu_vmem(cls, budget_bytes: int = VMEM_BUDGET, itemsize: int = 4) -> "Memory":
+        """The Pallas kernels' fast memory: VMEM with MXU alignment."""
+        return cls(budget_bytes, lane=LANE, sublane=SUBLANE, itemsize=itemsize)
+
+    @classmethod
+    def abstract(cls, words: int, itemsize: int = 1) -> "Memory":
+        """The paper's abstract M-word fast memory (§II-C): no alignment."""
+        return cls(words * itemsize, lane=1, sublane=1, itemsize=itemsize)
+
+    @property
+    def budget_words(self) -> int:
+        return self.budget_bytes // self.itemsize
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """Block sizes for one (possibly rank-augmented) MTTKRP-shaped
+    contraction: output rows ``block_i``, contraction dims
+    ``block_contract``, rank tile ``block_r``.
+
+    ``x_has_rank`` marks dimension-tree partial contractions whose tensor
+    operand already carries the rank axis (tile holds ``bi*prod(bc)*br``
+    words instead of ``bi*prod(bc)``).
+    """
+
+    block_i: int
+    block_contract: tuple[int, ...]
+    block_r: int
+    x_has_rank: bool = False
+
+    # -- Eq 9: working set -------------------------------------------------
+    def working_set_words(self, itemsize: int = 4) -> int:
+        """VMEM words held per grid step (Eq 9 analogue): X tile + factor
+        tiles + KRP block + output tile."""
+        del itemsize  # word count is itemsize-free; kept for API stability
+        prod_c = math.prod(self.block_contract)
+        x_tile = self.block_i * prod_c * (self.block_r if self.x_has_rank else 1)
+        f_tiles = sum(c * self.block_r for c in self.block_contract)
+        krp = prod_c * self.block_r
+        out = self.block_i * self.block_r
+        return x_tile + f_tiles + krp + out
+
+    def fits(self, memory: Memory) -> bool:
+        """Eq-9 feasibility against an explicit memory descriptor."""
+        return self.working_set_words() * memory.itemsize <= memory.budget_bytes
+
+    # -- shapes ------------------------------------------------------------
+    def blocks_per_mode(self) -> tuple[int, ...]:
+        """Per-mode block sizes with the output mode first (paper's b_k)."""
+        return (self.block_i,) + tuple(self.block_contract)
+
+    def padded_shape(self, shape: Sequence[int]) -> tuple[int, ...]:
+        """Input shape rounded up to block multiples (output mode first)."""
+        blocks = self.blocks_per_mode()
+        return tuple(_round_up(s, b) for s, b in zip(shape, blocks))
+
+    def grid(self, shape: Sequence[int], rank: int) -> tuple[int, ...]:
+        """Pallas grid (r, i, c_1..c_{N-1}) for the padded problem."""
+        padded = self.padded_shape(shape)
+        r_pad = _round_up(rank, self.block_r)
+        return (r_pad // self.block_r, padded[0] // self.block_i) + tuple(
+            padded[1 + d] // self.block_contract[d]
+            for d in range(len(self.block_contract))
+        )
+
+    # -- Eq 10: traffic ----------------------------------------------------
+    def eq10_words(self, shape: Sequence[int], rank: int) -> int:
+        """The paper's Eq (10) bound generalized to per-mode block sizes.
+
+        Per block (prod_k ceil(I_k/b_k) of them), each of the R rank
+        columns loads the N-1 factor subvectors (sum of their b_k) and
+        loads+stores the output subvector (2*b_out); plus one pass over the
+        tensor. With a uniform block b this is exactly
+        ``core.bounds.seq_blocked_cost``: I + prod ceil(I_k/b) * R*(N+1)*b.
+        """
+        blocks = self.blocks_per_mode()
+        nblocks = math.prod(
+            math.ceil(s / b) for s, b in zip(shape, blocks)
+        )
+        per_block = rank * (sum(blocks) + blocks[0])
+        return math.prod(shape) + nblocks * per_block
+
+    def traffic_model(
+        self, shape: Sequence[int], rank: int, itemsize: int = 4
+    ) -> dict:
+        """Modeled HBM<->VMEM traffic of the kernel (bytes), mirroring the
+        BlockSpec fetch rules: a block is re-fetched when its mapped index
+        changes between consecutive grid steps.
+
+        Grid (3-way): (i, r, j, k), k innermost. X fetched every step;
+        factor k every step; factor j once per k-sweep; O written once per
+        (i, r). ``eq10_bytes`` is the paper-ideal Eq-10 cost for the same
+        per-mode block sizes (see :meth:`eq10_words`).
+        """
+        n = len(shape)
+        padded = self.padded_shape(shape)
+        r_pad = _round_up(rank, self.block_r)
+        gi = padded[0] // self.block_i
+        gr = r_pad // self.block_r
+        gc = [
+            padded[1 + d] // self.block_contract[d] for d in range(n - 1)
+        ]
+        steps = gi * gr * math.prod(gc)
+        x_words = self.block_i * math.prod(self.block_contract)
+        if self.x_has_rank:
+            x_words *= self.block_r
+        x_bytes = steps * x_words * itemsize
+        f_bytes = 0
+        # factor d re-fetched when (c_d, r) changes; c_d sweeps with all
+        # inner dims constant-free: fetches = gi*gr*prod(gc[:d+1])
+        run = gi * gr
+        for d in range(n - 1):
+            run *= gc[d]
+            f_bytes += run * self.block_contract[d] * self.block_r * itemsize
+        o_bytes = gi * gr * self.block_i * self.block_r * itemsize
+        total = x_bytes + f_bytes + o_bytes
+        return {
+            "x_bytes": x_bytes,
+            "factor_bytes": f_bytes,
+            "out_bytes": o_bytes,
+            "total_bytes": total,
+            "eq10_bytes": self.eq10_words(shape, rank) * itemsize,
+            "steps": steps,
+            "working_set_bytes": self.working_set_words() * itemsize,
+        }
+
+
+def choose_blocks(
+    shape: Sequence[int],
+    rank: int,
+    itemsize: int = 4,
+    vmem_budget: int = VMEM_BUDGET,
+    *,
+    memory: Memory | None = None,
+    x_has_rank: bool = False,
+) -> BlockPlan:
+    """Pick TPU-aligned block sizes fitting the memory budget.
+
+    Strategy (mirrors the paper's b ~ (alpha*M)^{1/N} with TPU alignment):
+    output mode and rank tiles start at MXU-friendly 128; the minor
+    contraction dim at 128 (lane), other contraction dims at 8 (sublane);
+    then shrink the largest contributor until the working set fits.
+    """
+    if memory is None:
+        memory = Memory.tpu_vmem(vmem_budget, itemsize)
+    lane, sublane = memory.lane, memory.sublane
+    n = len(shape)
+    bi = min(_round_up(shape[0], sublane), 128)
+    br = min(_round_up(rank, lane), 512)
+    bc = []
+    for d in range(1, n):
+        if d == n - 1:  # minor dim: lane-aligned
+            bc.append(min(_round_up(shape[d], lane), 128))
+        else:
+            bc.append(min(_round_up(shape[d], sublane), max(sublane, 8)))
+    plan = BlockPlan(bi, tuple(bc), br, x_has_rank)
+    # shrink until it fits (keep alignment floors)
+    while not plan.fits(memory):
+        if plan.block_r > lane:
+            plan = BlockPlan(
+                plan.block_i, plan.block_contract, plan.block_r // 2,
+                x_has_rank,
+            )
+        elif plan.block_i > sublane:
+            plan = BlockPlan(
+                plan.block_i // 2, plan.block_contract, plan.block_r,
+                x_has_rank,
+            )
+        else:
+            bc = list(plan.block_contract)
+            grew = False
+            for d in range(len(bc) - 1):  # shrink non-minor contraction dims
+                if bc[d] > sublane:
+                    bc[d] //= 2
+                    grew = True
+                    break
+            if not grew:
+                if bc and bc[-1] > lane:
+                    bc[-1] //= 2
+                else:
+                    break  # minimal plan; accept
+            plan = BlockPlan(plan.block_i, tuple(bc), plan.block_r, x_has_rank)
+    return plan
+
+
+def mttkrp_traffic_model(
+    shape: Sequence[int], rank: int, plan: BlockPlan, itemsize: int = 4
+) -> dict:
+    """Back-compat functional spelling of :meth:`BlockPlan.traffic_model`."""
+    return plan.traffic_model(shape, rank, itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Uniform-b planning (the paper's exact Eq 9/10 setting; simulator + benches)
+# ---------------------------------------------------------------------------
+
+def best_uniform_block(dims: Sequence[int], memory: Memory | int) -> int:
+    """Largest uniform b with b^N + N*b <= M (Eq 9); the simulator's and the
+    sequential benchmarks' block selection. ``memory`` may be a word count
+    or a :class:`Memory` (its word budget is used)."""
+    mem_words = memory.budget_words if isinstance(memory, Memory) else memory
+    return best_block_size(dims, mem_words)
+
+
+def uniform_block_feasible(n: int, block: int, memory: Memory | int) -> bool:
+    """Eq (9)/(20): b^N + N*b <= M, against a Memory or raw word count."""
+    mem_words = memory.budget_words if isinstance(memory, Memory) else memory
+    return blocked_feasible_b(n, block, mem_words)
+
+
+def uniform_plan(dims: Sequence[int], rank: int, memory: Memory | int) -> BlockPlan:
+    """A :class:`BlockPlan` with the paper's uniform b in every mode.
+
+    ``plan.eq10_words(dims, rank)`` then equals
+    ``core.bounds.seq_blocked_cost(dims, rank, b)`` exactly.
+    """
+    b = best_uniform_block(dims, memory)
+    plan = BlockPlan(b, (b,) * (len(dims) - 1), rank)
+    assert int(plan.eq10_words(dims, rank)) == int(
+        seq_blocked_cost(dims, rank, b)
+    )
+    return plan

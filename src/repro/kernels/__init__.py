@@ -7,14 +7,22 @@ padding, and VMEM-budget block planning; ``ref`` holds the jnp oracles.
 All validated in interpret mode on CPU; compiled via Mosaic on TPU.
 """
 
-from .ops import BlockPlan, choose_blocks, mttkrp_pallas
+from .ops import (
+    BlockPlan,
+    choose_blocks,
+    mttkrp_canonical_pallas,
+    mttkrp_pallas,
+    mttkrp_partial_canonical_pallas,
+)
 from .ref import mttkrp_ref
 from .ssd_intra import ssd_intra_pallas, ssd_intra_ref
 
 __all__ = [
     "BlockPlan",
     "choose_blocks",
+    "mttkrp_canonical_pallas",
     "mttkrp_pallas",
+    "mttkrp_partial_canonical_pallas",
     "mttkrp_ref",
     "ssd_intra_pallas",
     "ssd_intra_ref",

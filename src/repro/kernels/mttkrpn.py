@@ -61,6 +61,101 @@ def _kernel(*refs, n_contract: int, acc_dtype):
     )
 
 
+def _partial_kernel(*refs, n_contract: int, acc_dtype):
+    """Rank-augmented partial contraction (dimension-tree internal node):
+
+        O(i, r) += sum_c X(i, c_1..c_k, r) * prod_d A_d(c_d, r)
+
+    Same output-stationary schedule as :func:`_kernel`, but the tensor tile
+    carries the rank axis, so the weight block combines elementwise along r
+    (a VPU reduce, not an MXU matmul)."""
+    x_ref = refs[0]
+    f_refs = refs[1 : 1 + n_contract]
+    o_ref = refs[1 + n_contract]
+
+    first_contract_step = pl.program_id(2) == 0
+    for d in range(1, n_contract):
+        first_contract_step &= pl.program_id(2 + d) == 0
+
+    @pl.when(first_contract_step)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    br = f_refs[0].shape[1]
+    w = f_refs[0][...].astype(acc_dtype)  # (b1, br)
+    for f in f_refs[1:]:
+        ft = f[...].astype(acc_dtype)  # (bd, br)
+        w = (w[:, None, :] * ft[None, :, :]).reshape(-1, br)
+    bi = x_ref.shape[0]
+    xm = x_ref[...].astype(acc_dtype).reshape(bi, -1, br)
+    o_ref[...] += jnp.sum(xm * w[None, :, :], axis=1)
+
+
+def mttkrp_partial_pallas(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    *,
+    block_i: int,
+    block_contract: Sequence[int],
+    block_r: int,
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Canonical rank-augmented partial MTTKRP: ``x`` is ``(I, C_1..C_k,
+    R)`` (a dimension-tree node that already carries the rank axis),
+    ``factors`` are the k dropped factors ``(C_d, R)``. Pre-padded inputs
+    required; returns ``(I, R)`` in ``acc_dtype``."""
+    nc = x.ndim - 2
+    assert len(factors) == nc and len(block_contract) == nc
+    i_sz = x.shape[0]
+    r_sz = x.shape[-1]
+    for d, f in enumerate(factors):
+        assert f.shape == (x.shape[1 + d], r_sz)
+        assert x.shape[1 + d] % block_contract[d] == 0
+    assert i_sz % block_i == 0 and r_sz % block_r == 0
+
+    grid = (
+        r_sz // block_r,
+        i_sz // block_i,
+    ) + tuple(x.shape[1 + d] // block_contract[d] for d in range(nc))
+
+    def x_map(r, i, *cs):
+        return (i,) + cs + (r,)
+
+    def f_map_for(d):
+        def f_map(r, i, *cs):
+            return (cs[d], r)
+        return f_map
+
+    def o_map(r, i, *cs):
+        return (i, r)
+
+    in_specs = [
+        pl.BlockSpec(
+            (block_i,) + tuple(block_contract) + (block_r,), x_map
+        )
+    ] + [
+        pl.BlockSpec((block_contract[d], block_r), f_map_for(d))
+        for d in range(nc)
+    ]
+    kernel = functools.partial(
+        _partial_kernel, n_contract=nc, acc_dtype=acc_dtype
+    )
+    kwargs = {}
+    cp = _compiler_params(nc)
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_i, block_r), o_map),
+        out_shape=jax.ShapeDtypeStruct((i_sz, r_sz), acc_dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, *factors)
+
+
 def mttkrpn_pallas(
     x: jax.Array,
     factors: Sequence[jax.Array],

@@ -1,9 +1,12 @@
 """jit'd public wrappers for the Pallas MTTKRP kernels.
 
 Handles: mode canonicalization (transpose output mode to axis 0), TPU-
-alignment padding, VMEM-budget block-size selection (the Eq-9 analogue
-``working_set(blocks) <= VMEM``), kernel dispatch (3-way specialized /
-N-way generic), un-padding, and dtype policy (f32 accumulation).
+alignment padding, kernel dispatch (3-way specialized / N-way generic /
+rank-augmented partial), un-padding, and dtype policy (f32 accumulation).
+
+Block planning and the traffic models live in :mod:`repro.engine.plan` —
+the single source of truth — and are re-exported here for back-compat
+(``from repro.kernels.ops import choose_blocks`` keeps working).
 
 ``interpret=None`` auto-selects: real Mosaic lowering on TPU backends,
 interpret mode elsewhere (this container validates on CPU).
@@ -12,126 +15,55 @@ interpret mode elsewhere (this container validates on CPU).
 from __future__ import annotations
 
 import functools
-import math
-from dataclasses import dataclass
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..engine.plan import (  # noqa: F401  (re-exported planner API)
+    LANE,
+    SUBLANE,
+    VMEM_BUDGET,
+    VMEM_BYTES,
+    BlockPlan,
+    choose_blocks,
+    mttkrp_traffic_model,
+)
 from .mttkrp3 import mttkrp3_pallas
-from .mttkrpn import mttkrpn_pallas
-
-LANE = 128
-SUBLANE = 8
-VMEM_BYTES = 16 * 2 ** 20  # v5e per-core VMEM
-VMEM_BUDGET = VMEM_BYTES // 2  # leave headroom for double-buffering
+from .mttkrpn import mttkrp_partial_pallas, mttkrpn_pallas
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-@dataclass(frozen=True)
-class BlockPlan:
-    block_i: int
-    block_contract: tuple[int, ...]
-    block_r: int
-
-    def working_set_words(self, itemsize: int = 4) -> int:
-        """VMEM words held per grid step (Eq 9 analogue): X tile + factor
-        tiles + KRP block + output tile."""
-        prod_c = math.prod(self.block_contract)
-        x_tile = self.block_i * prod_c
-        f_tiles = sum(c * self.block_r for c in self.block_contract)
-        krp = prod_c * self.block_r
-        out = self.block_i * self.block_r
-        return x_tile + f_tiles + krp + out
-
-
-def choose_blocks(
-    shape: Sequence[int],
-    rank: int,
-    itemsize: int = 4,
-    vmem_budget: int = VMEM_BUDGET,
-) -> BlockPlan:
-    """Pick TPU-aligned block sizes fitting the VMEM budget.
-
-    Strategy (mirrors the paper's b ≈ (αM)^{1/N} with TPU alignment): output
-    mode and rank tiles start at MXU-friendly 128; the minor contraction dim
-    at 128 (lane), other contraction dims at 8 (sublane); then shrink the
-    largest contributor until the working set fits.
-    """
-    n = len(shape)
-    bi = min(_round_up(shape[0], SUBLANE), 128)
-    br = min(_round_up(rank, LANE), 512)
-    bc = []
-    for d in range(1, n):
-        if d == n - 1:  # minor dim: lane-aligned
-            bc.append(min(_round_up(shape[d], LANE), 128))
-        else:
-            bc.append(min(_round_up(shape[d], SUBLANE), 8))
-    plan = BlockPlan(bi, tuple(bc), br)
-    # shrink until it fits (keep alignment floors)
-    while plan.working_set_words() * itemsize > vmem_budget:
-        if plan.block_r > LANE:
-            plan = BlockPlan(plan.block_i, plan.block_contract, plan.block_r // 2)
-        elif plan.block_i > SUBLANE:
-            plan = BlockPlan(plan.block_i // 2, plan.block_contract, plan.block_r)
-        else:
-            bc = list(plan.block_contract)
-            grew = False
-            for d in range(len(bc) - 1):  # shrink non-minor contraction dims
-                if bc[d] > SUBLANE:
-                    bc[d] //= 2
-                    grew = True
-                    break
-            if not grew:
-                if bc and bc[-1] > LANE:
-                    bc[-1] //= 2
-                else:
-                    break  # minimal plan; accept
-            plan = BlockPlan(plan.block_i, tuple(bc), plan.block_r)
-    return plan
-
-
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def mttkrp_pallas(
-    x: jax.Array,
-    factors: Sequence[jax.Array],
-    mode: int,
+def mttkrp_canonical_pallas(
+    xp: jax.Array,
+    fs: Sequence[jax.Array],
     *,
-    interpret: bool | None = None,
     plan: BlockPlan | None = None,
+    interpret: bool | None = None,
     out_dtype=None,
 ) -> jax.Array:
-    """MTTKRP for any mode via the Pallas blocked kernel.
+    """Mode-0-canonical MTTKRP through the blocked kernels.
 
-    Drop-in for :func:`repro.core.mttkrp.mttkrp` (f32 accumulation). The
-    tensor is transposed so ``mode`` is axis 0; inputs are zero-padded to
-    block multiples (zero tensor padding contributes nothing; padded output
-    rows are sliced away).
+    ``xp`` is the (already transposed) tensor with the output mode at axis
+    0; ``fs`` are the N-1 factors for axes 1..N-1 in order. Pads to the
+    plan's block multiples (zero tensor padding contributes nothing; padded
+    output rows/columns are sliced away), dispatches the 3-way specialized
+    or N-way generic kernel, and un-pads.
     """
     interpret = _auto_interpret() if interpret is None else interpret
-    n = x.ndim
-    if n < 3:
-        raise ValueError("pallas kernel supports N >= 3 (use core.mttkrp)")
-    perm = (mode,) + tuple(k for k in range(n) if k != mode)
-    xp = jnp.transpose(x, perm)
-    fs = [factors[k] for k in perm[1:]]
+    n = xp.ndim
     rank = fs[0].shape[1]
-    out_rows = x.shape[mode]
-
+    out_rows = xp.shape[0]
     if plan is None:
-        plan = choose_blocks(xp.shape, rank, x.dtype.itemsize)
-    # pad to block multiples
-    tgt = [_round_up(xp.shape[0], plan.block_i)] + [
-        _round_up(xp.shape[1 + d], plan.block_contract[d])
-        for d in range(n - 1)
-    ]
+        plan = choose_blocks(xp.shape, rank, xp.dtype.itemsize)
+    tgt = plan.padded_shape(xp.shape)
     r_pad = _round_up(rank, plan.block_r)
     xp = jnp.pad(xp, [(0, t - s) for t, s in zip(tgt, xp.shape)])
     fs = [
@@ -156,53 +88,77 @@ def mttkrp_pallas(
             interpret=interpret,
         )
     out = out[:out_rows, :rank]
-    return out.astype(out_dtype or x.dtype)
+    return out.astype(out_dtype) if out_dtype is not None else out
 
 
-def mttkrp_traffic_model(
-    shape: Sequence[int], rank: int, plan: BlockPlan, itemsize: int = 4
-) -> dict:
-    """Modeled HBM<->VMEM traffic of the kernel (bytes), mirroring the
-    BlockSpec fetch rules: a block is re-fetched when its mapped index
-    changes between consecutive grid steps.
+def mttkrp_pallas(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    interpret: bool | None = None,
+    plan: BlockPlan | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """MTTKRP for any mode via the Pallas blocked kernel.
 
-    Grid (3-way): (i, r, j, k), k innermost. X fetched every step; factor k
-    every step; factor j once per k-sweep; O written once per (i, r).
+    Drop-in for :func:`repro.core.mttkrp.mttkrp` (f32 accumulation). The
+    tensor is transposed so ``mode`` is axis 0, then dispatched through
+    :func:`mttkrp_canonical_pallas`.
     """
-    n = len(shape)
-    padded = [_round_up(shape[0], plan.block_i)] + [
-        _round_up(shape[1 + d], plan.block_contract[d]) for d in range(n - 1)
-    ]
+    n = x.ndim
+    if n < 3:
+        raise ValueError("pallas kernel supports N >= 3 (use core.mttkrp)")
+    perm = (mode,) + tuple(k for k in range(n) if k != mode)
+    xp = jnp.transpose(x, perm)
+    fs = [factors[k] for k in perm[1:]]
+    return mttkrp_canonical_pallas(
+        xp, fs, plan=plan, interpret=interpret,
+        out_dtype=out_dtype or x.dtype,
+    )
+
+
+def mttkrp_partial_canonical_pallas(
+    node: jax.Array,
+    fs: Sequence[jax.Array],
+    *,
+    plan: BlockPlan | None = None,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Rank-augmented partial contraction (dimension-tree internal node).
+
+    ``node`` is ``(I, C_1..C_k, R)`` — kept modes flattened into axis 0,
+    dropped modes next, rank last; ``fs`` are the k dropped factors
+    ``(C_d, R)``. Pads, runs :func:`mttkrp_partial_pallas`, un-pads.
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    rank = node.shape[-1]
+    out_rows = node.shape[0]
+    if plan is None:
+        plan = choose_blocks(
+            node.shape[:-1], rank, node.dtype.itemsize, x_has_rank=True
+        )
+    tgt = plan.padded_shape(node.shape[:-1])
     r_pad = _round_up(rank, plan.block_r)
-    gi = padded[0] // plan.block_i
-    gr = r_pad // plan.block_r
-    gc = [padded[1 + d] // plan.block_contract[d] for d in range(n - 1)]
-    steps = gi * gr * math.prod(gc)
-    x_bytes = steps * plan.block_i * math.prod(plan.block_contract) * itemsize
-    f_bytes = 0
-    # factor d re-fetched when (c_d, r) changes; c_d sweeps with all inner
-    # dims constant-free: fetches = gi*gr*prod(gc[:d+1])
-    run = gi * gr
-    for d in range(n - 1):
-        run *= gc[d]
-        f_bytes += run * plan.block_contract[d] * plan.block_r * itemsize
-    o_bytes = gi * gr * plan.block_i * plan.block_r * itemsize
-    total = x_bytes + f_bytes + o_bytes
-    # the paper's ideal (Eq 10-style, words -> bytes)
-    i_total = math.prod(shape)
-    ideal = (i_total + math.prod(
-        math.ceil(shape[d] / ([plan.block_i] + list(plan.block_contract))[d])
-        for d in range(n)
-    ) * rank * (n + 1) * max([plan.block_i] + list(plan.block_contract))) * itemsize
-    return {
-        "x_bytes": x_bytes,
-        "factor_bytes": f_bytes,
-        "out_bytes": o_bytes,
-        "total_bytes": total,
-        "eq10_bytes": ideal,
-        "steps": steps,
-        "working_set_bytes": plan.working_set_words() * itemsize,
-    }
+    node = jnp.pad(
+        node,
+        [(0, t - s) for t, s in zip(tgt, node.shape[:-1])]
+        + [(0, r_pad - rank)],
+    )
+    fs = [
+        jnp.pad(f, ((0, tgt[1 + d] - f.shape[0]), (0, r_pad - rank)))
+        for d, f in enumerate(fs)
+    ]
+    out = mttkrp_partial_pallas(
+        node, fs,
+        block_i=plan.block_i,
+        block_contract=plan.block_contract,
+        block_r=plan.block_r,
+        interpret=interpret,
+    )
+    out = out[:out_rows, :rank]
+    return out.astype(out_dtype) if out_dtype is not None else out
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "interpret"))

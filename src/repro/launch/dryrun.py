@@ -258,7 +258,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             - ma.alias_size_in_bytes
         ),
     }
-    ca = compiled.cost_analysis() or {}
+    from ..compat import cost_analysis
+
+    ca = cost_analysis(compiled)
     record["cost_raw"] = {  # XLA's own numbers (while bodies counted ONCE)
         "flops": ca.get("flops", 0.0),
         "bytes_accessed": ca.get("bytes accessed", 0.0),

@@ -7,17 +7,14 @@ device count before first jax init.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single-pod v5e 16x16 (256 chips) or 2-pod 2x16x16 (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def dp_axes(multi_pod: bool = False) -> tuple[str, ...]:
@@ -26,7 +23,4 @@ def dp_axes(multi_pod: bool = False) -> tuple[str, ...]:
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for 8-host-device tests."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(AxisType.Auto,) * 2,
-    )
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,90 @@
+"""Deterministic fallback shim for ``hypothesis``.
+
+The property tests in this repo use a small, fixed subset of the hypothesis
+API (``given``/``settings`` and the ``integers``/``lists``/``sampled_from``
+strategies). When the real package is unavailable (this container ships
+without it), ``conftest.py`` installs this module as ``sys.modules
+["hypothesis"]`` so the suite still runs: each ``@given`` test executes a
+deterministic, seeded sample sweep instead of adaptive search. With the real
+hypothesis installed (e.g. in CI), this file is inert.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+_MAX_EXAMPLES_CAP = 25  # keep the fallback sweep cheap
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rnd: opts[rnd.randrange(len(opts))])
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(
+                getattr(wrapper, "_stub_max_examples", 10), _MAX_EXAMPLES_CAP
+            )
+            rnd = random.Random(1234)
+            for _ in range(n):
+                drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the strategy-drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        remaining = [
+            p for name, p in sig.parameters.items() if name not in strategies
+        ]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper._stub_max_examples = 10
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this shim as the ``hypothesis`` package."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.lists = lists
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

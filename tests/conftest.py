@@ -5,10 +5,20 @@ smoke tests and benches must see 1 device. Multi-device distributed tests
 spawn subprocesses (see tests/dist/).
 """
 
+import os
+import sys
 import warnings
 
 import numpy as np
 import pytest
+
+try:  # real hypothesis when available; deterministic shim otherwise
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_stub import install as _install_hypothesis_stub
+
+    _install_hypothesis_stub()
 
 warnings.filterwarnings(
     "ignore", message=".*dtype float64 requested.*", category=UserWarning

@@ -19,6 +19,7 @@ import numpy as np  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.compat import make_mesh, shard_map  # noqa: E402
 from repro.core.bounds import par_general_cost, par_stationary_cost  # noqa: E402
 from repro.core.mttkrp import mttkrp  # noqa: E402
 from repro.core.tensor import random_factors, random_tensor  # noqa: E402
@@ -156,8 +157,7 @@ def check_cp_compressed_mean():
 
     from repro.core.tensor import random_low_rank_tensor
 
-    mesh = jax.make_mesh((8,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("dp",))
     dims, rank = (16, 12, 1), 6
     # worker-dependent gradients share a low-rank core (realistic: gradient
     # subspaces overlap across DP replicas) + per-worker perturbation
@@ -176,9 +176,9 @@ def check_cp_compressed_mean():
         return recon[None]
 
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             body, mesh=mesh, in_specs=P("dp", None, None, None),
-            out_specs=P("dp", None, None, None),
+            out_specs=P("dp", None, None, None), check_rep=False,
         )
     )
     recon_all = np.asarray(f(workers))
@@ -199,8 +199,7 @@ def check_collective_only_factor_sized():
     """The compressed all-reduce must move only Σ I_k R words, never Π I_k."""
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((8,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("dp",))
     dims, rank, sweeps = (32, 24, 1), 4, 2
     workers = random_tensor(jax.random.PRNGKey(11), (8,) + dims)
 
@@ -212,9 +211,9 @@ def check_collective_only_factor_sized():
         return recon[None]
 
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             body, mesh=mesh, in_specs=P("dp", None, None, None),
-            out_specs=P("dp", None, None, None),
+            out_specs=P("dp", None, None, None), check_rep=False,
         )
     )
     co = f.lower(workers).compile()
@@ -230,6 +229,31 @@ def check_collective_only_factor_sized():
     print("PASS collective_only_factor_sized")
 
 
+def check_alg3_pallas_local():
+    """Alg 3 with the engine's Pallas backend for the per-shard MTTKRP:
+    the collectives are unchanged and the local blocked kernel matches."""
+    dims, rank = (16, 16, 24), 8
+    x = random_tensor(jax.random.PRNGKey(20), dims)
+    fs = random_factors(jax.random.PRNGKey(21), dims, rank)
+    mesh = make_grid_mesh((2, 2, 2))
+    for mode in range(3):
+        f3 = mttkrp_stationary(mesh, mode, 3, backend="pallas",
+                               interpret=True)
+        xs, fl = place_inputs(mesh, x, fs, mode)
+        np.testing.assert_allclose(
+            np.asarray(f3(xs, *fl)), np.asarray(mttkrp(x, fs, mode)),
+            rtol=1e-4, atol=1e-4,
+        )
+    mesh4 = make_grid_mesh((2, 2, 1), p0=2)
+    f4 = mttkrp_general(mesh4, 0, 3, backend="pallas", interpret=True)
+    xs, fl = place_inputs(mesh4, x, fs, 0, rank_axis=True)
+    np.testing.assert_allclose(
+        np.asarray(f4(xs, *fl)), np.asarray(mttkrp(x, fs, 0)),
+        rtol=1e-4, atol=1e-4,
+    )
+    print("PASS alg_pallas_local")
+
+
 CHECKS = [
     check_alg3_numerics,
     check_alg3_asymmetric_grid,
@@ -240,6 +264,7 @@ CHECKS = [
     check_stationary_tensor_never_moves,
     check_cp_compressed_mean,
     check_collective_only_factor_sized,
+    check_alg3_pallas_local,
 ]
 
 if __name__ == "__main__":

@@ -54,6 +54,7 @@ def dist_transcript():
         "stationary_tensor_never_moves",
         "cp_compressed_mean",
         "collective_only_factor_sized",
+        "alg_pallas_local",
     ],
 )
 def test_distributed_check(dist_transcript, name):

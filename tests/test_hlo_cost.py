@@ -47,7 +47,9 @@ def test_flops_scale_linearly_with_layers():
     for layers in (2, 8):
         cfg = replace(get_smoke("qwen2-1.5b"), n_layers=layers)
         co = _compile_loss(cfg)
-        raw = co.cost_analysis().get("flops", 0.0)
+        from repro.compat import cost_analysis
+
+        raw = cost_analysis(co).get("flops", 0.0)
         walker = analyze_module(co.as_text()).flops
         vals[layers] = (raw, walker)
     raw_ratio = vals[8][0] / vals[2][0]

@@ -190,15 +190,16 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import tempfile
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint, restore_latest
 
 tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
-mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh_a = make_mesh((2, 4), ("data", "model"))
 sharded = {"w": jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model")))}
 with tempfile.TemporaryDirectory() as td:
     save_checkpoint(td, 1, sharded)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+    mesh_b = make_mesh((4, 2), ("data", "model"))
     spec_tree = {"w": P("model", "data")}
     step, restored = restore_latest(td, tree, mesh=mesh_b, spec_tree=spec_tree)
     assert step == 1
