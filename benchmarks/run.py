@@ -1,11 +1,20 @@
 """Benchmark harness: one module per paper table/claim (DESIGN.md §7).
 
-Prints ``name,us_per_call,derived`` CSV. Usage:
+Default output is ``name,us_per_call,derived`` CSV on stdout. ``--json
+PATH`` additionally writes a structured result file (schema-versioned,
+stamped with ``--commit``/``--timestamp`` passed by the caller) — the
+format the BENCH_*.json perf-trajectory files are built from.
+
+Usage:
     PYTHONPATH=src python -m benchmarks.run [module ...]
+    PYTHONPATH=src python -m benchmarks.run --json out.json \\
+        --commit "$(git rev-parse HEAD)" --timestamp "$(date -u +%s)" tune
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 MODULES = (
@@ -15,12 +24,59 @@ MODULES = (
     "cp_als",           # §VII: dimension-tree reuse + CP-ALS e2e
     "all_mode",         # engine: dimtree vs independent all-mode MTTKRP
     "kernel_mttkrp",    # Pallas Alg-2 kernel: correctness + traffic model
+    "tune",             # autotuner: search, warm-cache replay, calibration
     "lm_step",          # §Roofline: per-cell terms from the dry-run
 )
 
+JSON_SCHEMA_VERSION = 1
 
-def main() -> None:
-    want = set(sys.argv[1:]) or set(MODULES)
+
+def collect(want: set[str]) -> list[dict]:
+    """Run the selected modules, returning structured rows (errors become
+    rows too — a failing table must not kill the harness)."""
+    rows: list[dict] = []
+    for modname in MODULES:
+        if modname not in want:
+            continue
+        try:  # import inside: a module broken at import time is one
+            # [ERROR] row, not a dead harness
+            mod = __import__(f"benchmarks.{modname}", fromlist=["rows"])
+            for name, us, derived in mod.rows():
+                rows.append(
+                    {"name": name, "us_per_call": us, "derived": str(derived)}
+                )
+        except Exception as e:
+            rows.append(
+                {
+                    "name": f"{modname}[ERROR]",
+                    "us_per_call": 0.0,
+                    "derived": f"{type(e).__name__}:{e}",
+                }
+            )
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("modules", nargs="*", help=f"subset of {list(MODULES)}")
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write structured results to PATH (BENCH_*.json format)",
+    )
+    ap.add_argument(
+        "--commit", default=None,
+        help="commit id recorded in the JSON output (caller-provided)",
+    )
+    ap.add_argument(
+        "--timestamp", default=None,
+        help="timestamp recorded in the JSON output (caller-provided)",
+    )
+    args = ap.parse_args(argv)
+
+    want = set(args.modules) or set(MODULES)
     unknown = want - set(MODULES)
     if unknown:
         print(
@@ -29,17 +85,31 @@ def main() -> None:
             file=sys.stderr,
         )
         sys.exit(2)
+
     print("name,us_per_call,derived")
+    sys.stdout.flush()
+    rows = []
     for modname in MODULES:
         if modname not in want:
             continue
-        mod = __import__(f"benchmarks.{modname}", fromlist=["rows"])
-        try:
-            for name, us, derived in mod.rows():
-                print(f"{name},{us:.1f},{derived}")
-        except Exception as e:  # a failing table must not kill the harness
-            print(f"{modname}[ERROR],0.0,{type(e).__name__}:{e}")
-        sys.stdout.flush()
+        for row in collect({modname}):
+            rows.append(row)
+            print(
+                f"{row['name']},{row['us_per_call']:.1f},{row['derived']}"
+            )
+            sys.stdout.flush()
+
+    if args.json:
+        payload = {
+            "schema": JSON_SCHEMA_VERSION,
+            "commit": args.commit,
+            "timestamp": args.timestamp,
+            "modules": sorted(want),
+            "results": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {len(rows)} results to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

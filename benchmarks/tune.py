@@ -1,0 +1,156 @@
+"""Benchmark: the autotuning subsystem end-to-end.
+
+Three tables:
+
+  * ``tune_search``  — cold empirical search per shape (all executors,
+    perturbed plans, both 3-way kernel variants) and the winner.
+  * ``tune_replay``  — warm-cache ``backend="auto"``: asserts the cache
+    hit reproduces the tuned configuration *exactly* (no re-search), and
+    times auto against every fixed backend — warm auto must never be
+    slower than the worst fixed backend.
+  * ``tune_calib``   — per-machine calibration: Eq-10 model bytes vs the
+    HLO-measured bytes of the compiled blocked schedule for each shape
+    (the model-vs-measured error report), plus the fitted
+    bandwidth/overhead coefficients.
+
+Runs against an isolated temporary plan cache (never the user's).
+``REPRO_BENCH_TINY=1`` shrinks to one tiny shape for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+CASES = [
+    ((48, 40, 32), 8),
+    ((24, 20, 16, 8), 4),
+]
+TINY_CASES = [((16, 12, 8), 4)]
+
+
+def _timed(fn, reps: int = 2) -> float:
+    jax.block_until_ready(fn())  # warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def rows() -> list[tuple[str, float, str]]:
+    tiny = os.environ.get("REPRO_BENCH_TINY") == "1"
+    cases = TINY_CASES if tiny else CASES
+    out: list[tuple[str, float, str]] = []
+    from repro.engine import execute
+    from repro.tune.cache import default_cache, isolated_cache
+    from repro.tune.calibrate import DEFAULT_CASES, calibrate
+    from repro.tune.search import resolve, tune_mttkrp
+
+    with isolated_cache():
+
+        key = jax.random.PRNGKey(0)
+        for dims, rank in cases:
+            kx, *kf = jax.random.split(key, len(dims) + 1)
+            x = jax.random.normal(kx, dims, jnp.float32)
+            fs = [
+                jax.random.normal(k, (d, rank), jnp.float32)
+                for k, d in zip(kf, dims)
+            ]
+            name = f"{'x'.join(map(str, dims))},R{rank}"
+
+            # cold search
+            t0 = time.perf_counter()
+            res = tune_mttkrp(x, fs, 0, interpret=True, reps=2)
+            search_us = (time.perf_counter() - t0) * 1e6
+            assert not res.cache_hit
+            out.append(
+                (
+                    f"tune_search[{name}]",
+                    search_us,
+                    f"winner={res.winner.label};metric={res.metric};"
+                    f"candidates={len(res.measurements)}",
+                )
+            )
+
+            # warm replay: exact plan reproduction, no re-search
+            r = resolve(x.shape, rank, 0, x.dtype, None)
+            res2 = tune_mttkrp(x, fs, 0, interpret=True)
+            plan_match = (
+                r.cache_hit
+                and res2.cache_hit
+                and r.backend == res.winner.backend
+                and r.plan == res.winner.plan
+                and r.variant == res.winner.variant
+                and r.block == res.winner.block
+            )
+            fixed_us = {
+                b: _timed(
+                    lambda b=b: execute.mttkrp(
+                        x, fs, 0, backend=b, interpret=True
+                    )
+                )
+                for b in ("einsum", "blocked_host", "pallas")
+            }
+            auto_us = _timed(
+                lambda: execute.mttkrp(x, fs, 0, backend="auto")
+            )
+            worst = max(fixed_us.values())
+            best = min(fixed_us.values())
+            # the PR's acceptance invariants, enforced: a violation is an
+            # [ERROR] row the CI smoke step fails on
+            assert plan_match, (
+                f"warm cache did not reproduce the tuned config for "
+                f"{name}: {r} vs winner {res.winner}"
+            )
+            assert auto_us <= worst, (
+                f"warm backend='auto' slower than the worst fixed backend "
+                f"for {name}: {auto_us:.1f}us vs {fixed_us}"
+            )
+            out.append(
+                (
+                    f"tune_replay[{name}]",
+                    auto_us,
+                    f"hit={r.cache_hit};plan_match={plan_match};"
+                    f"auto_us={auto_us:.1f};best_fixed_us={best:.1f};"
+                    f"worst_fixed_us={worst:.1f};"
+                    f"not_slower_than_worst={auto_us <= worst}",
+                )
+            )
+
+        # calibration: model-vs-measured traffic error per shape
+        cal_cases = DEFAULT_CASES[:3] if tiny else DEFAULT_CASES
+        cal = calibrate(cal_cases, reps=2)
+        for r in cal.rows:
+            out.append(
+                (
+                    f"tune_calib[{'x'.join(map(str, r.shape))},R{r.rank}]",
+                    r.walltime_us,
+                    f"model_bytes={r.model_bytes};"
+                    f"measured_bytes={r.measured_bytes};"
+                    f"traffic_err={r.traffic_rel_err:+.1%};"
+                    f"pred_us={r.predicted_us:.1f};"
+                    f"time_err={r.time_rel_err:+.1%}",
+                )
+            )
+        out.append(
+            (
+                "tune_calib[fit]",
+                0.0,
+                f"bandwidth_B_per_us={cal.bandwidth_bytes_per_us:.1f};"
+                f"overhead_us={cal.overhead_us:.1f};"
+                f"shapes={len(cal.rows)};backend={cal.backend}",
+            )
+        )
+        out.append(
+            (
+                "tune_cache[entries]",
+                0.0,
+                f"path=isolated;entries={len(default_cache())}",
+            )
+        )
+    return out

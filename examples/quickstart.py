@@ -53,6 +53,29 @@ def main():
     print(f"  matmul baseline (§VI-A):          "
           f"{bounds.matmul_seq_cost(dims, rank, mem):,.0f} words")
 
+    # --- autotuning: backend="auto" -------------------------------------
+    # The analytic model above has machine-independent constants; the
+    # autotuner measures candidate plans on THIS machine, persists the
+    # winner in a plan cache, and replays it on every later call. (The
+    # cache normally lives at ~/.cache/repro-mttkrp/plans.json /
+    # $REPRO_TUNE_CACHE; the demo redirects it to a throwaway file and
+    # restores the env afterwards.)
+    from repro.engine import execute
+    from repro.tune.cache import isolated_cache
+    from repro.tune.search import resolve, tune_mttkrp
+
+    with isolated_cache():
+        factors = [jax.random.normal(jax.random.PRNGKey(k), (d, rank))
+                   for k, d in enumerate(dims)]
+        res = tune_mttkrp(x, factors, 0, interpret=True)  # cold: search once
+        print(f"\nautotuner winner: {res.winner.label} "
+              f"(metric={res.metric}, {len(res.measurements)} candidates)")
+        r = resolve(dims, rank, 0, x.dtype, None)         # warm: cache hit
+        print(f"  warm cache hit={r.cache_hit} -> backend={r.backend}")
+        b = execute.mttkrp(x, factors, 0, backend="auto")  # replays winner
+        print(f"  mttkrp(backend='auto') -> {b.shape}; later sessions "
+              f"replay the tuned plan from the cache, no re-search")
+
 
 if __name__ == "__main__":
     main()

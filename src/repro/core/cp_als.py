@@ -77,14 +77,17 @@ def cp_als(
     backend: str = "einsum",
     memory: "Memory | None" = None,
     interpret: bool | None = None,
+    tune: bool = False,
 ) -> CPResult:
     """CP-ALS. One sweep = for each mode n: B = MTTKRP; solve the normal
     equations A_n = B (Γ_n)^+; column-normalize into weights λ.
 
     Every MTTKRP goes through the engine: ``backend`` selects einsum /
-    blocked_host / pallas for both the plain per-mode path and the
-    dimension-tree sweep. A custom ``mttkrp_fn`` (e.g. a distributed Alg
-    3/4 shard_map callable) overrides the engine for the plain path."""
+    blocked_host / pallas — or ``"auto"`` to resolve each contraction
+    through the autotuner's plan cache (``tune=True`` searches and
+    persists on the first sweep's misses; later sweeps and runs replay
+    the tuned plans). A custom ``mttkrp_fn`` (e.g. a distributed Alg 3/4
+    shard_map callable) overrides the engine for the plain path."""
     n = x.ndim
     if init_factors is not None:
         factors = [jnp.asarray(f) for f in init_factors]
@@ -125,14 +128,14 @@ def cp_als(
         def mttkrp_fn(t, fs, mode):
             return engine_execute.mttkrp(
                 t, fs, mode, backend=backend, memory=memory,
-                interpret=interpret,
+                interpret=interpret, tune=tune,
             )
 
     for it in range(n_iters):
         if use_dimension_tree:
             dimtree_als_sweep(
                 x, factors, update, backend=backend, memory=memory,
-                interpret=interpret,
+                interpret=interpret, tune=tune,
             )
         else:
             for mode in range(n):

@@ -45,7 +45,10 @@ def engine_local_fn(
     own the collectives; the *local* MTTKRP inside each shard is exactly the
     sequential problem, so it runs through the same engine (and, with
     ``backend='pallas'``, the same blocked VMEM kernels) as the
-    single-device path.
+    single-device path. ``backend='auto'`` resolves against the autotuner's
+    plan cache keyed by the *local shard* shape — tuned local plans apply
+    inside shard_map because resolution is pure Python over static shapes
+    (it happens once, at trace time; no measurement is attempted there).
     """
     from ..engine import execute as engine_execute  # call-time: layer cycle
 
@@ -132,8 +135,9 @@ def mttkrp_stationary(
     blocked_host / pallas); an explicit ``local_fn`` overrides it.
     """
     # pallas_call has no shard_map replication rule on older jax; skip the
-    # (purely diagnostic) rep check when the local body contains a kernel
-    check_rep = backend != "pallas"
+    # (purely diagnostic) rep check when the local body may contain a kernel
+    # ("auto" can resolve to pallas at trace time)
+    check_rep = backend not in ("pallas", "auto")
     if local_fn is None:
         local_fn = engine_local_fn(backend, interpret)
     in_specs = (tensor_spec(ndim),) + tuple(
@@ -206,7 +210,7 @@ def mttkrp_general(
     Alg 3 is the special case p0 == 1 (the 'r' collectives degenerate).
     The local MTTKRP goes through the engine like :func:`mttkrp_stationary`.
     """
-    check_rep = backend != "pallas"
+    check_rep = backend not in ("pallas", "auto")
     if local_fn is None:
         local_fn = engine_local_fn(backend, interpret)
     in_specs = (tensor_spec(ndim, rank_split_mode=0),) + tuple(

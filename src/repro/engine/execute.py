@@ -8,6 +8,11 @@ Backends
                     mid-level oracle for the kernels.
 ``pallas``        — the blocked VMEM/MXU kernels (Algorithm 2 on TPU),
                     planned by :mod:`repro.engine.plan`.
+``auto``          — resolved through the autotuner (:mod:`repro.tune`):
+                    plan-cache hit replays the tuned backend/plan exactly;
+                    miss falls back to the analytic model-best
+                    configuration. ``tune=True`` searches empirically on a
+                    miss and persists the winner.
 
 :func:`contract_partial` is the engine's generalized contraction: any
 dimension-tree node (tensor x a subset of factors, optionally carrying the
@@ -52,8 +57,15 @@ def _count_pallas() -> None:
 def _check_backend(backend: str) -> None:
     if backend not in BACKENDS:
         raise ValueError(
-            f"unknown backend {backend!r}; expected one of {BACKENDS}"
+            f"unknown backend {backend!r}; expected one of "
+            f"{BACKENDS + ('auto',)}"
         )
+
+
+def _mode_first(shape: Sequence[int], mode: int) -> tuple[int, ...]:
+    return (shape[mode],) + tuple(
+        s for k, s in enumerate(shape) if k != mode
+    )
 
 
 def mttkrp(
@@ -67,14 +79,41 @@ def mttkrp(
     block: int | None = None,
     interpret: bool | None = None,
     out_dtype=None,
+    kernel_variant: str | None = None,
+    tune: bool = False,
 ) -> jax.Array:
     """MTTKRP through the engine: ``B^(mode)(i, r)``.
 
     ``plan`` pins explicit block sizes for the ``pallas`` backend;
     ``memory`` makes the planner target a non-default budget; ``block``
     sets the uniform host-blocking size for ``blocked_host`` (defaults to
-    the Eq-9 optimum for an abstract VMEM-word memory).
+    the Eq-9 optimum for an abstract VMEM-word memory); ``kernel_variant``
+    forces the 3-way specialized vs N-way generic kernel for ``pallas``.
+
+    ``backend="auto"`` consults the autotuner: a plan-cache hit replays
+    the tuned configuration exactly (no re-search); a miss uses the
+    analytic model-best. ``tune=True`` additionally runs the empirical
+    search on a miss and persists the winner (skipped under tracing,
+    where nothing can be timed — resolution itself is trace-safe).
     """
+    if backend == "auto":
+        # lazy import: engine <-> tune layer cycle
+        from ..tune.search import _is_concrete, resolve, tune_mttkrp
+
+        if tune and _is_concrete(x):
+            tune_mttkrp(
+                x, factors, mode, memory=memory, interpret=interpret
+            )
+        rank = next(
+            f.shape[1] for k, f in enumerate(factors) if k != mode
+        )
+        resolved = resolve(
+            _mode_first(x.shape, mode), rank, mode, x.dtype, memory
+        )
+        backend = resolved.backend
+        plan = plan if plan is not None else resolved.plan
+        block = block if block is not None else resolved.block
+        kernel_variant = kernel_variant or resolved.variant
     _check_backend(backend)
     if backend == "einsum":
         out = _einsum_mttkrp(x, factors, mode)
@@ -92,19 +131,17 @@ def mttkrp(
     from ..kernels import ops as kernel_ops  # lazy: avoids import cycle
 
     if plan is None and memory is not None:
-        perm_shape = (x.shape[mode],) + tuple(
-            s for k, s in enumerate(x.shape) if k != mode
-        )
         rank = next(
             f.shape[1] for k, f in enumerate(factors) if k != mode
         )
         plan = choose_blocks(
-            perm_shape, rank, x.dtype.itemsize, memory=memory
+            _mode_first(x.shape, mode), rank, x.dtype.itemsize,
+            memory=memory,
         )
     _count_pallas()
     return kernel_ops.mttkrp_pallas(
         x, factors, mode, plan=plan, interpret=interpret,
-        out_dtype=out_dtype,
+        out_dtype=out_dtype, variant=kernel_variant,
     )
 
 
@@ -118,6 +155,8 @@ def contract_partial(
     backend: str = "einsum",
     memory: Memory | None = None,
     interpret: bool | None = None,
+    plan: BlockPlan | None = None,
+    tune: bool = False,
 ) -> jax.Array:
     """Contract the factors for ``drop`` out of a dimension-tree ``node``.
 
@@ -130,12 +169,39 @@ def contract_partial(
     factors' Khatri-Rao structure is the weight. The ``pallas`` backend
     plans each one against the memory descriptor and dispatches the blocked
     kernels (the N-way generic kernel when the node has no rank axis yet,
-    the rank-augmented partial kernel otherwise).
+    the rank-augmented partial kernel otherwise). ``plan`` pins explicit
+    block sizes for ``pallas``. ``backend="auto"`` resolves each edge
+    through the autotuner's plan cache (kind ``"partial"``), falling back
+    to the model-best configuration on a miss; ``tune=True`` searches the
+    edge empirically on a miss and persists the winner (skipped under
+    tracing — resolution itself is trace-safe, so dimension-tree sweeps
+    inside jit still work).
     """
-    _check_backend(backend)
     modes = tuple(modes)
     drop = tuple(drop)
     keep = tuple(m for m in modes if m not in drop)
+    auto_plan: BlockPlan | None = plan
+    if backend == "auto":
+        # lazy import: engine <-> tune layer cycle
+        from ..tune.search import _is_concrete, resolve, tune_partial
+
+        if tune and _is_concrete(node):
+            tune_partial(
+                node, factors, modes, drop, has_rank, memory=memory,
+                interpret=interpret,
+            )
+        pos0 = {m: i for i, m in enumerate(modes)}
+        canon_shape = (
+            math.prod(node.shape[pos0[m]] for m in keep) if keep else 1,
+        ) + tuple(node.shape[pos0[m]] for m in drop)
+        resolved = resolve(
+            canon_shape, factors[drop[0]].shape[1], 0, node.dtype, memory,
+            kind="partial", x_has_rank=has_rank,
+        )
+        backend = resolved.backend
+        if auto_plan is None:
+            auto_plan = resolved.plan
+    _check_backend(backend)
     if backend != "pallas":
         # Algorithm 2's schedule matters only below the einsum boundary
         # here; blocked_host partials fall back to einsum (the host-blocked
@@ -169,18 +235,22 @@ def contract_partial(
     _count_pallas()
     if has_rank:
         xp = xp.reshape((i_rows,) + drop_sizes + (rank,))
-        plan = choose_blocks(
-            (i_rows,) + drop_sizes, rank, itemsize, memory=memory,
-            x_has_rank=True,
-        ) if memory is not None else None
+        plan = auto_plan if auto_plan is not None else (
+            choose_blocks(
+                (i_rows,) + drop_sizes, rank, itemsize, memory=memory,
+                x_has_rank=True,
+            ) if memory is not None else None
+        )
         out = kernel_ops.mttkrp_partial_canonical_pallas(
             xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
         )
     else:
         xp = xp.reshape((i_rows,) + drop_sizes)
-        plan = choose_blocks(
-            xp.shape, rank, itemsize, memory=memory
-        ) if memory is not None else None
+        plan = auto_plan if auto_plan is not None else (
+            choose_blocks(
+                xp.shape, rank, itemsize, memory=memory
+            ) if memory is not None else None
+        )
         out = kernel_ops.mttkrp_canonical_pallas(
             xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
         )

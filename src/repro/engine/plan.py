@@ -193,46 +193,73 @@ def choose_blocks(
     output mode and rank tiles start at MXU-friendly 128; the minor
     contraction dim at 128 (lane), other contraction dims at 8 (sublane);
     then shrink the largest contributor until the working set fits.
+
+    Degenerate extents never over-pad: a dimension smaller than its
+    alignment unit (a mode of size 1, a rank below the lane width) gets
+    the *full extent* as its block — the arrays are then padded to their
+    own size (no padding at all) rather than to a whole alignment tile,
+    and the traffic model stops charging phantom bytes. If even the
+    aligned-minimal plan exceeds the budget (only reachable for memories
+    far below real VMEM, e.g. abstract/simulated budgets), alignment is
+    relaxed rather than returning an Eq-9-infeasible plan.
     """
     if memory is None:
         memory = Memory.tpu_vmem(vmem_budget, itemsize)
     lane, sublane = memory.lane, memory.sublane
     n = len(shape)
-    bi = min(_round_up(shape[0], sublane), 128)
-    br = min(_round_up(rank, lane), 512)
+
+    def start(extent: int, unit: int, pref: int) -> int:
+        if extent <= unit:  # sub-unit dim: full extent, zero padding
+            return max(1, extent)
+        return min(_round_up(extent, unit), pref)
+
+    def floor(extent: int, unit: int) -> int:
+        return max(1, extent) if extent <= unit else unit
+
+    bi = start(shape[0], sublane, 128)
+    br = start(rank, lane, 512)
     bc = []
     for d in range(1, n):
         if d == n - 1:  # minor dim: lane-aligned
-            bc.append(min(_round_up(shape[d], lane), 128))
+            bc.append(start(shape[d], lane, 128))
         else:
-            bc.append(min(_round_up(shape[d], sublane), max(sublane, 8)))
+            bc.append(start(shape[d], sublane, max(sublane, 8)))
+    fi = floor(shape[0], sublane)
+    fr = floor(rank, lane)
+    fc = [
+        floor(shape[d], lane if d == n - 1 else sublane) for d in range(1, n)
+    ]
     plan = BlockPlan(bi, tuple(bc), br, x_has_rank)
     # shrink until it fits (keep alignment floors)
     while not plan.fits(memory):
-        if plan.block_r > lane:
-            plan = BlockPlan(
-                plan.block_i, plan.block_contract, plan.block_r // 2,
-                x_has_rank,
-            )
-        elif plan.block_i > sublane:
-            plan = BlockPlan(
-                plan.block_i // 2, plan.block_contract, plan.block_r,
-                x_has_rank,
-            )
+        bi, br = plan.block_i, plan.block_r
+        bc = list(plan.block_contract)
+        if br > fr:
+            br = max(fr, br // 2)
+        elif bi > fi:
+            bi = max(fi, bi // 2)
         else:
-            bc = list(plan.block_contract)
-            grew = False
+            shrunk = False
             for d in range(len(bc) - 1):  # shrink non-minor contraction dims
-                if bc[d] > sublane:
-                    bc[d] //= 2
-                    grew = True
+                if bc[d] > fc[d]:
+                    bc[d] = max(fc[d], bc[d] // 2)
+                    shrunk = True
                     break
-            if not grew:
-                if bc and bc[-1] > lane:
-                    bc[-1] //= 2
+            if not shrunk:
+                if bc and bc[-1] > fc[-1]:
+                    bc[-1] = max(fc[-1], bc[-1] // 2)
                 else:
-                    break  # minimal plan; accept
-            plan = BlockPlan(plan.block_i, tuple(bc), plan.block_r, x_has_rank)
+                    break  # aligned floors reached; relax below
+        plan = BlockPlan(bi, tuple(bc), br, x_has_rank)
+    # last resort: relax alignment (largest contributor first) so the
+    # returned plan satisfies Eq 9 whenever any plan can
+    while not plan.fits(memory):
+        dims = [plan.block_i, *plan.block_contract, plan.block_r]
+        j = max(range(len(dims)), key=lambda k: dims[k])
+        if dims[j] <= 1:
+            break  # all-1 blocks; nothing fits this memory
+        dims[j] //= 2
+        plan = BlockPlan(dims[0], tuple(dims[1:-1]), dims[-1], x_has_rank)
     return plan
 
 

@@ -31,6 +31,7 @@ def _solve_tree(
     backend: str,
     memory: Memory | None,
     interpret: bool | None,
+    tune: bool = False,
 ) -> None:
     """Walk the binary dimension tree, calling ``leaf_fn(mode, b)`` at each
     leaf with that mode's MTTKRP result.
@@ -54,6 +55,7 @@ def _solve_tree(
                 contract_partial(
                     node, factors, modes, drop, has_rank,
                     backend=backend, memory=memory, interpret=interpret,
+                    tune=tune,
                 ),
                 child, True,
             )
@@ -69,20 +71,23 @@ def all_mode_mttkrp(
     backend: str = "einsum",
     memory: Memory | None = None,
     interpret: bool | None = None,
+    tune: bool = False,
 ) -> list[jax.Array]:
     """MTTKRP in every mode: ``[B^(0), ..., B^(N-1)]``.
 
     ``method='independent'`` runs N separate MTTKRPs (no reuse);
     ``method='dimtree'`` shares the upper-tree partial contractions
     (~2 tensor-sized contractions per sweep instead of N). Either way each
-    contraction goes through the requested engine backend.
+    contraction goes through the requested engine backend —
+    ``backend="auto"`` resolves every edge through the autotuner's plan
+    cache (see :mod:`repro.tune`).
     """
     n = x.ndim
     if method == "independent":
         return [
             mttkrp(
                 x, factors, m, backend=backend, memory=memory,
-                interpret=interpret,
+                interpret=interpret, tune=tune,
             )
             for m in range(n)
         ]
@@ -91,7 +96,7 @@ def all_mode_mttkrp(
     results: Dict[int, jax.Array] = {}
     _solve_tree(
         x, factors, lambda mode, b: results.__setitem__(mode, b),
-        backend=backend, memory=memory, interpret=interpret,
+        backend=backend, memory=memory, interpret=interpret, tune=tune,
     )
     return [results[m] for m in range(n)]
 
@@ -104,6 +109,7 @@ def dimtree_als_sweep(
     backend: str = "einsum",
     memory: Memory | None = None,
     interpret: bool | None = None,
+    tune: bool = False,
 ) -> None:
     """One ALS sweep with dimension-tree reuse, *exactly* matching the
     Gauss-Seidel order of plain ALS.
@@ -119,5 +125,5 @@ def dimtree_als_sweep(
 
     _solve_tree(
         x, factors, leaf, backend=backend, memory=memory,
-        interpret=interpret,
+        interpret=interpret, tune=tune,
     )

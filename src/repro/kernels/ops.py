@@ -48,6 +48,7 @@ def mttkrp_canonical_pallas(
     plan: BlockPlan | None = None,
     interpret: bool | None = None,
     out_dtype=None,
+    variant: str | None = None,
 ) -> jax.Array:
     """Mode-0-canonical MTTKRP through the blocked kernels.
 
@@ -56,7 +57,13 @@ def mttkrp_canonical_pallas(
     plan's block multiples (zero tensor padding contributes nothing; padded
     output rows/columns are sliced away), dispatches the 3-way specialized
     or N-way generic kernel, and un-pads.
+
+    ``variant`` pins the kernel for 3-way tensors: ``"specialized"`` (the
+    default, :func:`mttkrp3_pallas`) or ``"generic"`` (the N-way kernel) —
+    the autotuner measures both. N > 3 always uses the generic kernel.
     """
+    if variant not in (None, "specialized", "generic"):
+        raise ValueError(f"unknown kernel variant {variant!r}")
     interpret = _auto_interpret() if interpret is None else interpret
     n = xp.ndim
     rank = fs[0].shape[1]
@@ -70,7 +77,7 @@ def mttkrp_canonical_pallas(
         jnp.pad(f, ((0, tgt[1 + d] - f.shape[0]), (0, r_pad - rank)))
         for d, f in enumerate(fs)
     ]
-    if n == 3:
+    if n == 3 and variant != "generic":
         out = mttkrp3_pallas(
             xp, fs[0], fs[1],
             block_i=plan.block_i,
@@ -99,6 +106,7 @@ def mttkrp_pallas(
     interpret: bool | None = None,
     plan: BlockPlan | None = None,
     out_dtype=None,
+    variant: str | None = None,
 ) -> jax.Array:
     """MTTKRP for any mode via the Pallas blocked kernel.
 
@@ -114,7 +122,7 @@ def mttkrp_pallas(
     fs = [factors[k] for k in perm[1:]]
     return mttkrp_canonical_pallas(
         xp, fs, plan=plan, interpret=interpret,
-        out_dtype=out_dtype or x.dtype,
+        out_dtype=out_dtype or x.dtype, variant=variant,
     )
 
 

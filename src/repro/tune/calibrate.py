@@ -1,0 +1,243 @@
+"""Calibrate the analytic traffic model against this machine.
+
+``BlockPlan.traffic_model`` / ``BlockPlan.eq10_words`` predict memory
+traffic in the paper's machine-free units. On a real machine two things
+differ: (1) the *achieved* traffic of the lowered program (XLA fusion
+reorders and elides transfers) and (2) the constant factors relating
+traffic to time (effective bandwidth, per-call overhead). This module
+measures both:
+
+  * **measured traffic** — the trip-count-aware HLO byte count of the
+    compiled blocked schedule (:mod:`repro.analysis.hlo_cost`), the same
+    walker the roofline analysis trusts;
+  * **measured time** — synchronized wall time of the same executable;
+
+then fits ``time_us ≈ overhead_us + model_bytes / bandwidth`` by least
+squares across the calibration shapes. The resulting
+:class:`Calibration` turns any plan's modeled bytes into a predicted
+time (``predict_us``), and :func:`calibration_report` prints the
+model-vs-measured traffic error per shape — the honesty check the
+autotuner's model-based rankings rest on.
+
+Coefficients persist in the plan cache's ``calibration`` section, so a
+later session can score plans with this machine's constants without
+re-measuring.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..engine.plan import Memory, uniform_plan
+from .cache import PlanCache, default_cache
+
+# small enough to calibrate in seconds on CPU, large enough that the
+# blocked schedule's traffic dominates fixed overheads
+DEFAULT_CASES: tuple[tuple[tuple[int, ...], int], ...] = (
+    ((48, 40, 32), 8),
+    ((64, 48, 32), 16),
+    ((96, 64, 48), 8),
+    ((32, 24, 16, 12), 8),
+)
+
+
+@dataclass
+class ShapeCalibration:
+    """Model-vs-measured numbers for one calibration shape."""
+
+    shape: tuple[int, ...]
+    rank: int
+    block: int
+    model_bytes: int
+    measured_bytes: int
+    walltime_us: float
+    predicted_us: float = float("nan")
+
+    @property
+    def traffic_rel_err(self) -> float:
+        """(model - measured) / measured: the Eq-10 model's honesty."""
+        if self.measured_bytes <= 0:
+            return float("nan")
+        return (self.model_bytes - self.measured_bytes) / self.measured_bytes
+
+    @property
+    def time_rel_err(self) -> float:
+        if not self.walltime_us:
+            return float("nan")
+        return (self.predicted_us - self.walltime_us) / self.walltime_us
+
+
+@dataclass
+class Calibration:
+    """Per-machine coefficients: ``time_us = overhead_us + bytes/bandwidth``."""
+
+    bandwidth_bytes_per_us: float
+    overhead_us: float
+    rows: list[ShapeCalibration] = field(default_factory=list)
+    backend: str = "cpu"
+
+    def predict_us(self, model_bytes: float) -> float:
+        return self.overhead_us + model_bytes / max(
+            self.bandwidth_bytes_per_us, 1e-12
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "bandwidth_bytes_per_us": self.bandwidth_bytes_per_us,
+            "overhead_us": self.overhead_us,
+            "backend": self.backend,
+            "jax": jax.__version__,
+            "rows": [
+                {
+                    "shape": list(r.shape),
+                    "rank": r.rank,
+                    "block": r.block,
+                    "model_bytes": r.model_bytes,
+                    "measured_bytes": r.measured_bytes,
+                    "walltime_us": r.walltime_us,
+                    "predicted_us": r.predicted_us,
+                }
+                for r in self.rows
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Calibration":
+        cal = cls(
+            float(d["bandwidth_bytes_per_us"]),
+            float(d["overhead_us"]),
+            backend=d.get("backend", "cpu"),
+        )
+        for r in d.get("rows", ()):
+            cal.rows.append(
+                ShapeCalibration(
+                    tuple(r["shape"]), r["rank"], r["block"],
+                    r["model_bytes"], r["measured_bytes"], r["walltime_us"],
+                    r.get("predicted_us", float("nan")),
+                )
+            )
+        return cal
+
+
+def _measured_bytes(compiled) -> int:
+    """Trip-count-aware byte count of a compiled executable (falls back to
+    XLA's raw cost_analysis if the walker can't parse the module)."""
+    try:
+        from ..analysis.hlo_cost import analyze_module
+
+        return int(analyze_module(compiled.as_text()).bytes)
+    except Exception:  # pragma: no cover - parser drift safety
+        from ..compat import cost_analysis
+
+        return int(cost_analysis(compiled).get("bytes accessed", 0))
+
+
+def _fit_affine(xs: Sequence[float], ys: Sequence[float]) -> tuple[float, float]:
+    """Least-squares ``y ≈ a + b*x`` without numpy.linalg (tiny system)."""
+    n = len(xs)
+    mx = sum(xs) / n
+    my = sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    if sxx <= 0:
+        return my, 0.0
+    b = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / sxx
+    a = my - b * mx
+    return a, b
+
+
+def calibrate(
+    cases: Sequence[tuple[Sequence[int], int]] = DEFAULT_CASES,
+    *,
+    memory: Memory | None = None,
+    reps: int = 3,
+    cache: PlanCache | None = None,
+    persist: bool = True,
+) -> Calibration:
+    """Measure the blocked schedule on each case and fit the coefficients.
+
+    Uses the ``blocked_host`` executor (Algorithm 2's schedule lowered
+    through XLA) because its compiled HLO is byte-countable on every
+    backend — the Pallas kernel's interpret-mode bytes are not the TPU's.
+    Requires >= 3 cases so the affine fit and the per-shape error report
+    are meaningful.
+    """
+    if len(cases) < 3:
+        raise ValueError("calibration needs at least 3 shapes")
+    from ..engine import execute as engine_execute  # call-time: layer cycle
+
+    mem = memory or Memory.abstract(1 << 16)
+    rows: list[ShapeCalibration] = []
+    key = jax.random.PRNGKey(0)
+    for dims, rank in cases:
+        dims = tuple(dims)
+        plan = uniform_plan(dims, rank, mem)
+        b = plan.block_i
+        model_bytes = int(plan.eq10_words(dims, rank)) * 4
+        kx, *kf = jax.random.split(key, len(dims) + 1)
+        x = jax.random.normal(kx, dims, jnp.float32)
+        fs = tuple(
+            jax.random.normal(k, (d, rank), jnp.float32)
+            for k, d in zip(kf, dims)
+        )
+
+        def run(x, fs, _b=b):
+            return engine_execute.mttkrp(
+                x, fs, 0, backend="blocked_host", block=_b
+            )
+
+        compiled = jax.jit(run).lower(x, fs).compile()
+        measured = _measured_bytes(compiled)
+        jax.block_until_ready(compiled(x, fs))  # warm
+        best = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(compiled(x, fs))
+            best = min(best, (time.perf_counter() - t0) * 1e6)
+        rows.append(
+            ShapeCalibration(dims, rank, b, model_bytes, measured, best)
+        )
+
+    overhead, inv_bw = _fit_affine(
+        [r.model_bytes for r in rows], [r.walltime_us for r in rows]
+    )
+    overhead = max(overhead, 0.0)
+    bandwidth = (1.0 / inv_bw) if inv_bw > 0 else float("inf")
+    cal = Calibration(bandwidth, overhead, rows, jax.default_backend())
+    for r in rows:
+        r.predicted_us = cal.predict_us(r.model_bytes)
+    if persist:
+        (cache or default_cache()).put_calibration(cal.to_dict())
+    return cal
+
+
+def load_calibration(cache: PlanCache | None = None) -> Calibration | None:
+    d = (cache or default_cache()).get_calibration()
+    return Calibration.from_dict(d) if d else None
+
+
+def calibration_report(cal: Calibration) -> str:
+    """Human-readable model-vs-measured table (one row per shape)."""
+    lines = [
+        f"calibration[{cal.backend}]: "
+        f"bandwidth={cal.bandwidth_bytes_per_us:.1f} B/us, "
+        f"overhead={cal.overhead_us:.1f} us",
+        f"{'shape':>18} {'rank':>4} {'b':>4} {'model_MB':>9} "
+        f"{'measured_MB':>11} {'traffic_err':>11} {'time_us':>9} "
+        f"{'pred_us':>9} {'time_err':>9}",
+    ]
+    for r in cal.rows:
+        terr = r.traffic_rel_err
+        perr = r.time_rel_err
+        lines.append(
+            f"{'x'.join(map(str, r.shape)):>18} {r.rank:>4} {r.block:>4} "
+            f"{r.model_bytes / 1e6:>9.3f} {r.measured_bytes / 1e6:>11.3f} "
+            f"{terr:>+10.1%} {r.walltime_us:>9.1f} {r.predicted_us:>9.1f} "
+            f"{perr if math.isfinite(perr) else float('nan'):>+8.1%}"
+        )
+    return "\n".join(lines)
