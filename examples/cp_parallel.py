@@ -1,10 +1,15 @@
 """Distributed CP-ALS with the paper's parallel MTTKRP algorithms.
 
-Runs on 8 XLA host devices (set below, BEFORE jax import): the tensor is
-block-distributed over a 2x2x2 grid (Algorithm 3, stationary) or a
-rank-partitioned 2x(2,2,1) grid (Algorithm 4), factors live in the paper's
-§V data distributions, and each ALS mode update calls the shard_map MTTKRP.
-Prints the measured per-processor collective bytes against Eq (12)/(16).
+Runs on 8 XLA host devices (set below, BEFORE jax import).  Three parts:
+
+1. Automatic grid selection: ``grid_select`` minimizes the Eq (12)/(16)
+   per-processor communication exactly (vs. the paper's asymptotic rule).
+2. The stationary CP-ALS sweep driver: X block-distributed over the
+   selected grid, one shard_map program per sweep (factor gathers
+   amortized across all N mode updates, Ballard–Hayashi–Kannan style),
+   with the measured per-sweep collective bytes against the sweep model
+   and against N independent Alg-3 calls.
+3. Single-mode Algorithm 4 (rank-partitioned) for the large-NR regime.
 
     PYTHONPATH=src python examples/cp_parallel.py
 """
@@ -21,89 +26,97 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.bounds import par_general_cost, par_stationary_cost
-from repro.core.cp_als import _grams, _hadamard_except  # noqa
-from repro.core.tensor import frob_norm, random_low_rank_tensor
+from repro.core.cp_als import cp_als
+from repro.core.mttkrp import mttkrp
+from repro.core.tensor import (
+    frob_norm,
+    random_factors,
+    random_low_rank_tensor,
+    relative_error,
+    tensor_from_factors,
+)
 from repro.distributed import (
+    build_cp_sweep,
+    choose_cp_grid,
     make_grid_mesh,
     mttkrp_general,
-    mttkrp_stationary,
     parse_collectives,
+    place_cp_state,
     place_inputs,
+    select_grid,
+    stationary_sweep_words,
 )
 
 
-def distributed_cp_als(x, rank, grid, p0=1, iters=10):
-    """CP-ALS where every MTTKRP runs distributed (Alg 3 if p0==1 else
-    Alg 4); Gram solves are tiny (R x R) and run replicated."""
-    mesh = make_grid_mesh(grid, p0=p0)
+def grid_selection_demo(dims, rank):
+    procs = len(jax.devices())
+    choice = choose_cp_grid(dims, rank, procs)
+    print(f"sweep-optimal grid for {dims}, R={rank}, P={procs}: "
+          f"{'x'.join(map(str, choice.grid))} "
+          f"({choice.words:.0f} words/processor/sweep)")
+    big = select_grid(dims, 4096, 512, algorithm="auto", mode=0)
+    print(f"large-NR regime (R=4096, P=512): Alg {'4' if big.p0 > 1 else '3'}"
+          f" with p0={big.p0}, grid {'x'.join(map(str, big.grid))}\n")
+    return choice
+
+
+def sweep_driver_demo(x, rank, choice):
+    dims = x.shape
     ndim = x.ndim
-    key = jax.random.PRNGKey(1)
-    factors = [
-        jax.random.normal(jax.random.fold_in(key, k), (d, rank)) /
-        jnp.sqrt(rank)
-        for k, d in enumerate(x.shape)
-    ]
-    build = mttkrp_general if p0 > 1 else mttkrp_stationary
-    fns = [build(mesh, mode, ndim) for mode in range(ndim)]
-    comm_bytes = []
-    for mode in range(ndim):
-        xs, fl = place_inputs(mesh, x, factors, mode, rank_axis=p0 > 1)
-        comm_bytes.append(
-            parse_collectives(
-                fns[mode].lower(xs, *fl).compile().as_text()
-            ).ring_bytes
-        )
-    normx = frob_norm(x)
-    fit = None
-    for it in range(iters):
-        for mode in range(ndim):
-            xs, fl = place_inputs(mesh, x, factors, mode, rank_axis=p0 > 1)
-            b = np.asarray(fns[mode](xs, *fl))  # gather (host does solve)
-            grams = [f.T @ f for f in factors]
-            gamma = jnp.ones((rank, rank))
-            for k in range(ndim):
-                if k != mode:
-                    gamma = gamma * grams[k]
-            ridge = 1e-6 * jnp.trace(gamma) / rank
-            a = jnp.linalg.solve(
-                gamma + ridge * jnp.eye(rank), jnp.asarray(b).T
-            ).T
-            factors[mode] = a
-        # fit via implicit identity
-        b_last = jnp.asarray(b)
-        gram_full = jnp.ones((rank, rank))
-        for f in factors:
-            gram_full = gram_full * (f.T @ f)
-        inner = jnp.sum(b_last * factors[ndim - 1])
-        err = jnp.sqrt(
-            jnp.maximum(normx ** 2 - 2 * inner + jnp.sum(gram_full), 0.0)
-        )
-        fit = float(1 - err / normx)
-    return fit, comm_bytes
+    mesh = make_grid_mesh(choice.grid, dims=dims, rank=rank)
+    # measure one compiled sweep's collective bytes
+    sweep = build_cp_sweep(mesh, ndim)
+    factors = random_factors(jax.random.PRNGKey(1), dims, rank)
+    xs, fs, blocks, grams = place_cp_state(mesh, x, factors)
+    normx = jax.device_put(frob_norm(x), NamedSharding(mesh, P()))
+    co = sweep.lower(xs, fs, blocks, grams, normx).compile()
+    measured = parse_collectives(co.as_text()).ring_bytes
+    model = stationary_sweep_words(dims, rank, choice.grid) * 4
+    indep = sum(
+        par_stationary_cost(dims, rank, choice.grid, m) for m in range(ndim)
+    ) * 4
+    print(f"per-sweep collective bytes: measured {measured}B, "
+          f"model {model:.0f}B (+1 fit all-reduce), "
+          f"N independent Eq(12) calls {indep:.0f}B")
+    # the actual decomposition, auto grid, through the core driver
+    res = cp_als(x, rank, n_iters=20, key=jax.random.PRNGKey(2),
+                 distributed=True)
+    recon = tensor_from_factors(res.factors, res.weights)
+    print(f"distributed CP-ALS: fit={res.final_fit:.5f}, "
+          f"recon rel-err={float(relative_error(x, recon)):.2e}\n")
+
+
+def alg4_demo(x, rank):
+    dims = x.shape
+    p0, grid = 2, (2, 2, 1)
+    mesh = make_grid_mesh(grid, p0=p0, dims=dims, rank=rank)
+    fs = random_factors(jax.random.PRNGKey(3), dims, rank)
+    print(f"Algorithm 4 (general, P0={p0}, grid "
+          f"{'x'.join(map(str, grid))}):")
+    for mode in range(3):
+        f4 = mttkrp_general(mesh, mode, 3)
+        xs, fl = place_inputs(mesh, x, fs, mode, rank_axis=True)
+        got = parse_collectives(
+            f4.lower(xs, *fl).compile().as_text()
+        ).ring_bytes
+        want = par_general_cost(dims, rank, grid, p0, mode) * 4
+        ref = mttkrp(x, fs, mode)
+        err = float(np.max(np.abs(np.asarray(f4(xs, *fl)) - np.asarray(ref))))
+        print(f"  mode {mode}: measured {got}B vs Eq(16) {want:.0f}B, "
+              f"max|err|={err:.1e}")
 
 
 def main():
     dims, rank = (16, 16, 16), 4
     x, _ = random_low_rank_tensor(jax.random.PRNGKey(0), dims, rank)
     print(f"devices: {len(jax.devices())}; tensor {dims}, rank {rank}\n")
-
-    fit3, comm3 = distributed_cp_als(x, rank, (2, 2, 2), p0=1)
-    pred3 = [par_stationary_cost(dims, rank, (2, 2, 2), m) * 4
-             for m in range(3)]
-    print(f"Algorithm 3 (stationary, grid 2x2x2):  fit={fit3:.5f}")
-    for m, (got, want) in enumerate(zip(comm3, pred3)):
-        print(f"  mode {m}: measured {got}B vs Eq(12) {want:.0f}B")
-
-    fit4, comm4 = distributed_cp_als(x, rank, (2, 2, 1), p0=2)
-    pred4 = [par_general_cost(dims, rank, (2, 2, 1), 2, m) * 4
-             for m in range(3)]
-    print(f"\nAlgorithm 4 (general, P0=2, grid 2x2x1): fit={fit4:.5f}")
-    for m, (got, want) in enumerate(zip(comm4, pred4)):
-        print(f"  mode {m}: measured {got}B vs Eq(16) {want:.0f}B")
+    choice = grid_selection_demo(dims, rank)
+    sweep_driver_demo(x, rank, choice)
+    alg4_demo(x, rank)
 
 
 if __name__ == "__main__":

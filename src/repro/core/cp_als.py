@@ -23,7 +23,6 @@ from typing import TYPE_CHECKING, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from .mttkrp import mttkrp
 from .tensor import frob_norm, random_factors
 
 if TYPE_CHECKING:  # engine imports stay call-time-only (core <-> engine cycle)
@@ -34,6 +33,12 @@ MttkrpFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
 
 @dataclass
 class CPResult:
+    """A Kruskal-form decomposition: column-normalized ``factors`` plus the
+    column scales ``weights`` (λ).  The scales live ONLY here — they are
+    never also folded into a factor, so reconstruction applies λ exactly
+    once: ``tensor_from_factors(factors, weights)`` (or
+    :meth:`reconstruct`)."""
+
     factors: list[jax.Array]
     weights: jax.Array
     fits: list[float] = field(default_factory=list)
@@ -41,6 +46,11 @@ class CPResult:
     @property
     def final_fit(self) -> float:
         return self.fits[-1] if self.fits else float("nan")
+
+    def reconstruct(self) -> jax.Array:
+        from .tensor import tensor_from_factors
+
+        return tensor_from_factors(self.factors, self.weights)
 
 
 def _grams(factors: Sequence[jax.Array]) -> list[jax.Array]:
@@ -78,6 +88,10 @@ def cp_als(
     memory: "Memory | None" = None,
     interpret: bool | None = None,
     tune: bool = False,
+    distributed: bool = False,
+    mesh=None,
+    grid: Sequence[int] | None = None,
+    procs: int | None = None,
 ) -> CPResult:
     """CP-ALS. One sweep = for each mode n: B = MTTKRP; solve the normal
     equations A_n = B (Γ_n)^+; column-normalize into weights λ.
@@ -87,7 +101,39 @@ def cp_als(
     through the autotuner's plan cache (``tune=True`` searches and
     persists on the first sweep's misses; later sweeps and runs replay
     the tuned plans). A custom ``mttkrp_fn`` (e.g. a distributed Alg 3/4
-    shard_map callable) overrides the engine for the plain path."""
+    shard_map callable) overrides the engine for the plain path.
+
+    ``distributed=True`` (or passing ``mesh``/``grid``/``procs``) runs the
+    stationary-tensor sweep driver instead
+    (:func:`repro.distributed.cp_als_parallel.cp_als_parallel`): X is
+    block-distributed over an automatically selected Eq (12)-optimal
+    processor grid and each sweep is one shard_map program whose local
+    MTTKRPs still go through the engine ``backend``."""
+    if distributed or mesh is not None or grid is not None or procs is not None:
+        if mttkrp_fn is not None:
+            raise ValueError(
+                "mttkrp_fn cannot be combined with the distributed path "
+                "(the sweep driver owns the collectives)"
+            )
+        if use_dimension_tree:
+            raise ValueError(
+                "use_dimension_tree is not supported with distributed=True"
+            )
+        if tune:
+            raise ValueError(
+                "tune=True is not supported on the distributed path "
+                "(nothing can be measured under the shard_map trace); "
+                "pre-tune the local shard shapes with "
+                "engine.execute.mttkrp(..., tune=True), then run "
+                "distributed with backend='auto' to replay the cache"
+            )
+        from ..distributed.cp_als_parallel import cp_als_parallel
+
+        return cp_als_parallel(
+            x, rank, n_iters, key=key, init_factors=init_factors,
+            grid=grid, mesh=mesh, procs=procs, backend=backend,
+            interpret=interpret, memory=memory, tol=tol,
+        )
     n = x.ndim
     if init_factors is not None:
         factors = [jnp.asarray(f) for f in init_factors]
@@ -146,8 +192,9 @@ def cp_als(
         fits.append(fit)
         if tol and it > 0 and abs(fits[-1] - fits[-2]) < tol:
             break
-    # fold weights into the last-updated factor for a plain Kruskal form
-    factors[state["g_last"]] = factors[state["g_last"]] * weights
+    # Kruskal form: factors stay column-normalized, λ is returned ONLY in
+    # CPResult.weights.  (It used to be folded into the last-updated factor
+    # *and* returned, so reconstructing with weights scaled by λ twice.)
     return CPResult(factors, weights, fits)
 
 
@@ -157,10 +204,28 @@ def cp_gradient(
     n_iters: int = 200,
     lr: float = 0.05,
     key: jax.Array | None = None,
-    mttkrp_fn: MttkrpFn = mttkrp,
+    mttkrp_fn: MttkrpFn | None = None,
+    backend: str = "einsum",
+    memory: "Memory | None" = None,
+    interpret: bool | None = None,
+    tune: bool = False,
 ) -> CPResult:
-    """Gradient-based CP (Adam on the analytic MTTKRP gradient)."""
+    """Gradient-based CP (Adam on the analytic MTTKRP gradient).
+
+    Engine parity with :func:`cp_als`: every MTTKRP goes through
+    ``engine.execute.mttkrp`` with the same ``backend``/``memory``/
+    ``interpret``/``tune`` knobs (it used to hardcode the naive einsum
+    default, so gradient CP never hit the Pallas kernels or tuned plans).
+    An explicit ``mttkrp_fn`` still overrides."""
     n = x.ndim
+    if mttkrp_fn is None:
+        from ..engine import execute as engine_execute
+
+        def mttkrp_fn(t, fs, mode):
+            return engine_execute.mttkrp(
+                t, fs, mode, backend=backend, memory=memory,
+                interpret=interpret, tune=tune,
+            )
     key = key if key is not None else jax.random.PRNGKey(0)
     factors = random_factors(key, x.shape, rank, x.dtype)
     normx = frob_norm(x)

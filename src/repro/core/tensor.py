@@ -59,10 +59,14 @@ def dematricize(xm: jax.Array, mode: int, shape: Sequence[int]) -> jax.Array:
     return jnp.transpose(xt, inv)
 
 
-def tensor_from_factors(factors: Sequence[jax.Array]) -> jax.Array:
+def tensor_from_factors(
+    factors: Sequence[jax.Array], weights: jax.Array | None = None
+) -> jax.Array:
     """Reconstruct the full tensor from CP factors: sum of rank-1 outer products.
 
     ``factors[k]`` has shape ``(I_k, R)``; result has shape ``(I_1, ..., I_N)``.
+    ``weights`` (λ, shape ``(R,)``) scales each rank-1 term once — pass
+    ``CPResult.weights`` for decompositions in normalized Kruskal form.
     """
     n = len(factors)
     if n < 2:
@@ -71,8 +75,12 @@ def tensor_from_factors(factors: Sequence[jax.Array]) -> jax.Array:
     letters = "abcdefghijklmnopqrstuvw"
     for k in range(n):
         subs.append(f"{letters[k]}z")
+    ops = list(factors)
+    if weights is not None:
+        subs.append("z")
+        ops.append(weights)
     spec = ",".join(subs) + "->" + letters[:n]
-    return jnp.einsum(spec, *factors)
+    return jnp.einsum(spec, *ops)
 
 
 def frob_norm(x: jax.Array) -> jax.Array:

@@ -1,8 +1,11 @@
-"""Distributed runtime: parallel MTTKRP algorithms, grids, HLO analysis."""
+"""Distributed runtime: parallel MTTKRP algorithms, grid selection,
+the CP-ALS sweep driver, and HLO analysis."""
 
-from .mesh import make_grid_mesh, mode_axis, hyperslice_axes
+from .mesh import make_grid_mesh, mode_axis, hyperslice_axes, validate_grid
 from .mttkrp_parallel import (
     engine_local_fn,
+    gather_factor,
+    gather_factors,
     mttkrp_stationary,
     mttkrp_general,
     place_inputs,
@@ -10,19 +13,44 @@ from .mttkrp_parallel import (
     factor_spec,
     output_spec,
 )
+from .grid_select import (
+    GridChoice,
+    choose_cp_grid,
+    select_grid,
+    select_general_grid,
+    select_stationary_grid,
+    stationary_sweep_words,
+)
+from .cp_als_parallel import (
+    build_cp_sweep,
+    cp_als_parallel,
+    place_cp_state,
+)
 from .hlo import parse_collectives, collective_bytes, CollectiveSummary
 
 __all__ = [
     "make_grid_mesh",
     "mode_axis",
     "hyperslice_axes",
+    "validate_grid",
     "engine_local_fn",
+    "gather_factor",
+    "gather_factors",
     "mttkrp_stationary",
     "mttkrp_general",
     "place_inputs",
     "tensor_spec",
     "factor_spec",
     "output_spec",
+    "GridChoice",
+    "choose_cp_grid",
+    "select_grid",
+    "select_general_grid",
+    "select_stationary_grid",
+    "stationary_sweep_words",
+    "build_cp_sweep",
+    "cp_als_parallel",
+    "place_cp_state",
     "parse_collectives",
     "collective_bytes",
     "CollectiveSummary",

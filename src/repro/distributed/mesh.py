@@ -9,6 +9,7 @@ the rank axis is ``r``. A mode-k *hyperslice* (the paper's
 
 from __future__ import annotations
 
+import math
 from typing import Sequence
 
 import jax
@@ -20,8 +21,87 @@ def mode_axis(k: int) -> str:
     return f"m{k}"
 
 
-def make_grid_mesh(grid: Sequence[int], p0: int = 1) -> jax.sharding.Mesh:
-    """Mesh for Alg 3 (p0=1) or Alg 4 (p0>1): axes ('r',) m0, ..., m{N-1}."""
+def validate_grid(
+    grid: Sequence[int],
+    p0: int = 1,
+    dims: Sequence[int] | None = None,
+    rank: int | None = None,
+    check_devices: bool = True,
+) -> None:
+    """Eagerly reject infeasible grids with actionable messages.
+
+    Checks the grid itself (positive integer axes, P_0·ΠP_k within the
+    available device count unless ``check_devices=False`` — grid *selection*
+    may target more processors than this host exposes) and — when
+    ``dims``/``rank`` are given — the even-sharding requirements of the §V
+    data distributions: ``P_k | I_k`` (X's block distribution),
+    ``(P/P_0) | I_k`` (factor rows spread over every grid axis per
+    ``row_sharding_axes``), and for Alg 4 ``P_0 | R`` plus
+    ``P_0·P_1 | I_1`` (X's mode-0 split across the rank axis).  This is
+    the single source of feasibility: ``grid_select.shardable`` delegates
+    here.
+    """
+    grid = tuple(grid)
+    if not grid or any(g < 1 or g != int(g) for g in grid):
+        raise ValueError(
+            f"grid must be a non-empty tuple of positive ints, got {grid}"
+        )
+    if p0 < 1:
+        raise ValueError(f"p0 must be >= 1, got {p0}")
+    if p0 > 1 and rank is not None and rank % p0:
+        raise ValueError(f"rank axis p0={p0} does not divide R={rank}")
+    if dims is not None:
+        dims = tuple(dims)
+        if len(dims) != len(grid):
+            raise ValueError(
+                f"grid {grid} is {len(grid)}-way but the tensor is "
+                f"{len(dims)}-way ({dims})"
+            )
+        mode_procs = math.prod(grid)
+        for k, (d, pk) in enumerate(zip(dims, grid)):
+            if d % pk:
+                raise ValueError(
+                    f"grid axis m{k}={pk} does not divide tensor extent "
+                    f"I_{k}={d}: X cannot be block-distributed evenly"
+                )
+            if d % mode_procs:
+                raise ValueError(
+                    f"factor {k} rows (I_{k}={d}) are spread over all "
+                    f"{mode_procs} grid processors but {mode_procs} does "
+                    f"not divide {d}: uneven factor shards"
+                )
+        if p0 > 1:
+            if dims[0] % (p0 * grid[0]):
+                raise ValueError(
+                    f"Alg 4 splits mode 0 across (r, m0) = "
+                    f"{p0}x{grid[0]} but {p0 * grid[0]} does not divide "
+                    f"I_0={dims[0]}"
+                )
+    if check_devices:
+        total = p0 * math.prod(grid)
+        ndev = len(jax.devices())
+        if total > ndev:
+            raise ValueError(
+                f"grid {grid} with p0={p0} needs {total} devices but only "
+                f"{ndev} are available (set "
+                f"--xla_force_host_platform_device_count or shrink the "
+                f"grid)"
+            )
+
+
+def make_grid_mesh(
+    grid: Sequence[int],
+    p0: int = 1,
+    dims: Sequence[int] | None = None,
+    rank: int | None = None,
+) -> jax.sharding.Mesh:
+    """Mesh for Alg 3 (p0=1) or Alg 4 (p0>1): axes ('r',) m0, ..., m{N-1}.
+
+    Validates eagerly (see :func:`validate_grid`); pass the tensor ``dims``
+    (and ``rank`` for Alg 4) to also check the even-sharding requirements
+    before any shard_map trace produces an opaque error.
+    """
+    validate_grid(grid, p0, dims, rank)
     shape = tuple(grid) if p0 == 1 else (p0,) + tuple(grid)
     names = tuple(mode_axis(k) for k in range(len(grid)))
     if p0 != 1:
@@ -29,14 +109,13 @@ def make_grid_mesh(grid: Sequence[int], p0: int = 1) -> jax.sharding.Mesh:
     return make_mesh(shape, names)
 
 
-def hyperslice_axes(ndim: int, k: int, with_rank_axis: bool = False) -> tuple[str, ...]:
+def hyperslice_axes(ndim: int, k: int) -> tuple[str, ...]:
     """Axes of the mode-k hyperslice: every mode axis except m{k}.
 
     The gather/reduce-scatter collectives of Alg 3/4 run over these axes;
     the rank axis never participates (factors are partitioned, not
     replicated, along r).
     """
-    del with_rank_axis  # rank axis never included, by construction
     return tuple(mode_axis(j) for j in range(ndim) if j != k)
 
 

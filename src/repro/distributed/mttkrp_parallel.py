@@ -37,7 +37,9 @@ LocalFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
 
 
 def engine_local_fn(
-    backend: str = "einsum", interpret: bool | None = None
+    backend: str = "einsum",
+    interpret: bool | None = None,
+    memory=None,
 ) -> LocalFn:
     """Per-processor MTTKRP through the engine's dispatch layer.
 
@@ -54,10 +56,32 @@ def engine_local_fn(
 
     def fn(x, factors, mode):
         return engine_execute.mttkrp(
-            x, factors, mode, backend=backend, interpret=interpret
+            x, factors, mode, backend=backend, interpret=interpret,
+            memory=memory,
         )
 
     return fn
+
+
+def gather_factor(f_loc: jax.Array, ndim: int, k: int) -> jax.Array:
+    """Line 4 of Alg 3/4: all-gather factor k's block-rows over the mode-k
+    hyperslice, reconstructing S^{(k)}_{p_k} on every processor of it."""
+    return jax.lax.all_gather(
+        f_loc, hyperslice_axes(ndim, k), axis=0, tiled=True
+    )
+
+
+def gather_factors(
+    f_locs: Sequence[jax.Array | None], ndim: int, skip: int | None = None
+) -> list[jax.Array | None]:
+    """Batched factor gathers: one :func:`gather_factor` per non-``skip``
+    mode (``f_locs`` is indexed by mode; ``None`` entries pass through).
+    The CP-ALS sweep driver and Alg 3/4 share this so every consumer emits
+    identical collectives (the HLO byte accounting depends on it)."""
+    return [
+        None if (k == skip or f is None) else gather_factor(f, ndim, k)
+        for k, f in enumerate(f_locs)
+    ]
 
 
 # --------------------------------------------------------------------------
@@ -100,16 +124,14 @@ def _stationary_local(
     local_fn: LocalFn,
 ) -> jax.Array:
     """Per-processor body of Algorithm 3 (runs under shard_map)."""
-    gathered: list[jax.Array | None] = [None] * ndim
+    by_mode: list[jax.Array | None] = [None] * ndim
     fi = 0
     for k in range(ndim):
-        if k == mode:
-            continue
-        # Line 4: A^(k)_{p_k} = All-Gather over the mode-k hyperslice
-        gathered[k] = jax.lax.all_gather(
-            f_locs[fi], hyperslice_axes(ndim, k), axis=0, tiled=True
-        )
-        fi += 1
+        if k != mode:
+            by_mode[k] = f_locs[fi]
+            fi += 1
+    # Line 4: A^(k)_{p_k} = All-Gather over the mode-k hyperslice
+    gathered = gather_factors(by_mode, ndim, skip=mode)
     # Line 6: local MTTKRP
     c = local_fn(x_loc, gathered, mode)
     # Line 7: Reduce-Scatter over the mode-n hyperslice
@@ -176,17 +198,15 @@ def _general_local(
     """Per-processor body of Algorithm 4 (runs under shard_map)."""
     # Line 3: All-Gather the subtensor across the rank-axis fiber
     x_full = jax.lax.all_gather(x_loc, ("r",), axis=0, tiled=True)
-    gathered: list[jax.Array | None] = [None] * ndim
+    by_mode: list[jax.Array | None] = [None] * ndim
     fi = 0
     for k in range(ndim):
-        if k == mode:
-            continue
-        # Line 5: gather factor block-rows over the mode-k hyperslice
-        # (never across r: each rank-slice keeps its own T_{p_0} columns)
-        gathered[k] = jax.lax.all_gather(
-            f_locs[fi], hyperslice_axes(ndim, k), axis=0, tiled=True
-        )
-        fi += 1
+        if k != mode:
+            by_mode[k] = f_locs[fi]
+            fi += 1
+    # Line 5: gather factor block-rows over the mode-k hyperslices
+    # (never across r: each rank-slice keeps its own T_{p_0} columns)
+    gathered = gather_factors(by_mode, ndim, skip=mode)
     # Line 7: local MTTKRP on the gathered subtensor and factor columns
     c = local_fn(x_full, gathered, mode)
     # Line 8: Reduce-Scatter over the mode-n hyperslice

@@ -25,6 +25,15 @@ warnings.filterwarnings(
 )
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy kernel/tune/distributed suites — PRs run the fast "
+        "subset (-m 'not slow'); pushes to main and the nightly schedule "
+        "run everything",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(1234)

@@ -19,8 +19,32 @@ def test_als_recovers_exact_low_rank():
     x, _ = random_low_rank_tensor(jax.random.PRNGKey(0), (12, 10, 8), 3)
     res = cp_als(x, 3, n_iters=60, key=jax.random.PRNGKey(1))
     assert res.final_fit > 0.999
-    recon = tensor_from_factors(res.factors)
+    recon = tensor_from_factors(res.factors, res.weights)
     assert float(relative_error(x, recon)) < 0.02
+
+
+def test_als_weights_not_double_counted():
+    """Regression: λ used to be folded into the last-updated factor AND
+    returned in CPResult.weights, so reconstructing with weights scaled by
+    λ twice.  Now the factors are column-normalized Kruskal form: applying
+    weights exactly once reconstructs X; the old double-application leaves
+    a large error."""
+    x, _ = random_low_rank_tensor(jax.random.PRNGKey(20), (12, 10, 8), 3)
+    res = cp_als(x, 3, n_iters=60, key=jax.random.PRNGKey(25))
+    assert res.final_fit > 0.999
+    # every factor is column-normalized (λ lives only in .weights)
+    for f in res.factors:
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(f, axis=0)), 1.0, rtol=1e-4
+        )
+    once = tensor_from_factors(res.factors, res.weights)
+    assert float(relative_error(x, once)) < 0.02
+    assert float(relative_error(x, res.reconstruct())) < 0.02
+    # the buggy convention (weights applied twice) must NOT reconstruct
+    folded = [f for f in res.factors]
+    folded[-1] = folded[-1] * res.weights
+    twice = tensor_from_factors(folded, res.weights)
+    assert float(relative_error(x, twice)) > 0.05
 
 
 def test_als_fit_monotone_after_burnin():
@@ -51,6 +75,35 @@ def test_als_with_matmul_baseline_backend():
     )
     for fa, fb in zip(a.fits, b.fits):
         assert abs(fa - fb) < 5e-3
+
+
+def test_distributed_path_rejects_unsupported_combinations():
+    """The distributed branch fails loudly (before any mesh work) on
+    options the sweep driver cannot honor, instead of silently ignoring
+    them."""
+    x = jnp.zeros((4, 4, 4))
+    with pytest.raises(ValueError, match="mttkrp_fn"):
+        cp_als(x, 2, distributed=True, mttkrp_fn=mttkrp)
+    with pytest.raises(ValueError, match="use_dimension_tree"):
+        cp_als(x, 2, distributed=True, use_dimension_tree=True)
+    with pytest.raises(ValueError, match="tune=True is not supported"):
+        cp_als(x, 2, distributed=True, backend="auto", tune=True)
+
+
+def test_gradient_engine_parity():
+    """Regression: cp_gradient used to hardcode the naive einsum MTTKRP and
+    accept no engine knobs.  It now dispatches through the engine like
+    cp_als: the Pallas backend (interpret mode on CPU) yields the same
+    optimization trajectory as the einsum backend."""
+    x, _ = random_low_rank_tensor(jax.random.PRNGKey(30), (8, 6, 5), 2)
+    ein = cp_gradient(x, 2, n_iters=30, lr=0.05, key=jax.random.PRNGKey(31))
+    pal = cp_gradient(
+        x, 2, n_iters=30, lr=0.05, key=jax.random.PRNGKey(31),
+        backend="pallas", interpret=True,
+    )
+    assert len(ein.fits) == len(pal.fits) > 0
+    for a, b in zip(ein.fits, pal.fits):
+        assert abs(a - b) < 1e-4, (a, b)
 
 
 def test_gradient_driver_converges():

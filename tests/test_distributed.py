@@ -42,6 +42,7 @@ def dist_transcript():
     return proc.stdout
 
 
+@pytest.mark.slow  # 8-device subprocess: compiles every shard_map program
 @pytest.mark.parametrize(
     "name",
     [
@@ -55,12 +56,17 @@ def dist_transcript():
         "cp_compressed_mean",
         "collective_only_factor_sized",
         "alg_pallas_local",
+        "cp_sweep_matches_sequential",
+        "cp_sweep_comm_beats_independent",
+        "cp_auto_grid_driver",
+        "cp_sweep_pallas_local",
     ],
 )
 def test_distributed_check(dist_transcript, name):
     assert f"PASS {name}" in dist_transcript
 
 
+@pytest.mark.slow
 def test_dist_worker_completed(dist_transcript):
     assert "ALL_DIST_OK" in dist_transcript
 

@@ -1,0 +1,158 @@
+"""Grid selection (distributed/grid_select.py) against brute force, and the
+eager mesh/grid validation — all single-device (pure integer programs)."""
+
+import math
+
+import pytest
+
+from repro.core.bounds import par_general_cost, par_stationary_cost
+from repro.core.grid import optimal_grid
+from repro.distributed.grid_select import (
+    brute_force_general,
+    brute_force_stationary,
+    choose_cp_grid,
+    select_general_grid,
+    select_grid,
+    select_stationary_grid,
+    shardable,
+    stationary_sweep_words,
+)
+from repro.distributed.mesh import make_grid_mesh, validate_grid
+
+CASES_3WAY = [
+    ((64, 64, 64), 16),
+    ((256, 1024, 64), 8),
+    ((48, 96, 32), 256),   # NR large: rank axis pays off for Alg 4
+    ((128, 16, 16), 4),
+]
+CASES_4WAY = [
+    ((32, 32, 32, 32), 8),
+    ((64, 16, 48, 8), 96),
+]
+P_SWEEP = (2, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+
+@pytest.mark.parametrize("dims,rank", CASES_3WAY + CASES_4WAY)
+def test_stationary_select_matches_brute_force(dims, rank):
+    """The pruned Eq (12) search returns exactly the brute-force optimum,
+    for single-mode and sweep objectives, P <= 64."""
+    for procs in P_SWEEP:
+        for mode in (0, len(dims) - 1, None):
+            sel = select_stationary_grid(dims, rank, procs, mode)
+            ref = brute_force_stationary(dims, rank, procs, mode)
+            assert (sel is None) == (ref is None)
+            if sel is None:
+                continue
+            assert sel.grid == ref.grid, (procs, mode)
+            assert sel.words == ref.words
+            assert math.prod(sel.grid) == procs
+
+
+@pytest.mark.parametrize("dims,rank", CASES_3WAY + CASES_4WAY)
+def test_general_select_matches_brute_force(dims, rank):
+    """The pruned Eq (16) search over (P_0, grid) == brute force, P <= 64."""
+    for procs in P_SWEEP:
+        sel = select_general_grid(dims, rank, procs)
+        ref = brute_force_general(dims, rank, procs)
+        assert (sel is None) == (ref is None)
+        if sel is None:
+            continue
+        assert (sel.p0, sel.grid) == (ref.p0, ref.grid), procs
+        assert sel.words == ref.words
+        assert sel.p0 * math.prod(sel.grid) == procs
+
+
+def test_selected_costs_are_the_eq12_eq16_formulas():
+    dims, rank, procs = (64, 64, 64), 16, 32
+    s = select_stationary_grid(dims, rank, procs, mode=1)
+    assert s.words == par_stationary_cost(dims, rank, s.grid, 1)
+    g = select_general_grid(dims, rank, procs)
+    assert g.words == par_general_cost(dims, rank, g.grid, g.p0, 0)
+    sw = select_stationary_grid(dims, rank, procs, mode=None)
+    assert sw.words == stationary_sweep_words(dims, rank, sw.grid)
+
+
+def test_general_never_worse_and_consistent_with_core_optimal_grid():
+    """Alg 4 with a free P_0 dominates Alg 3 (P_0=1 is in its search
+    space), and the exhaustive search agrees with core.grid.optimal_grid's
+    Eq (16) optimum wherever both are defined."""
+    for dims, rank in CASES_3WAY:
+        for procs in (4, 8, 16, 64):
+            s = select_stationary_grid(dims, rank, procs, mode=0)
+            g = select_general_grid(dims, rank, procs)
+            assert g.words <= s.words + 1e-9
+            p0, grid = optimal_grid(dims, rank, procs)
+            assert g.words == pytest.approx(
+                par_general_cost(dims, rank, grid, p0, 0), rel=0, abs=0
+            )
+
+
+def test_select_grid_auto_picks_cheaper():
+    dims, procs = (64, 64, 64), 64
+    # small NR: stationary regime
+    auto = select_grid(dims, 4, procs, algorithm="auto", mode=0)
+    stat = select_grid(dims, 4, procs, algorithm="stationary", mode=0)
+    gen = select_grid(dims, 4, procs, algorithm="general", mode=0)
+    assert auto.words == min(stat.words, gen.words)
+    # large NR: the rank axis must win
+    auto = select_grid(dims, 4096, procs, algorithm="auto", mode=0)
+    assert auto.algorithm == "general" and auto.p0 > 1
+    with pytest.raises(ValueError, match="stationary-only"):
+        select_grid(dims, 4, procs, algorithm="general", mode=None)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        select_grid(dims, 4, procs, algorithm="nope")
+
+
+def test_sweep_objective_beats_per_mode_sum_choice():
+    """The sweep objective is the symmetric all-mode cost: the chosen grid
+    minimizes sum-over-modes Eq (12), not any single mode's."""
+    dims, rank = (256, 16, 16), 8
+    sw = select_stationary_grid(dims, rank, 16, mode=None)
+    total = lambda g: sum(  # noqa: E731
+        par_stationary_cost(dims, rank, g, m) for m in range(3)
+    )
+    for other_mode in range(3):
+        om = select_stationary_grid(dims, rank, 16, mode=other_mode)
+        assert total(sw.grid) <= total(om.grid) + 1e-9
+
+
+def test_shardable_and_choose_cp_grid():
+    assert shardable((32, 32, 32), 4, (2, 2, 2))
+    assert not shardable((32, 32, 30), 4, (2, 2, 2))  # 8 does not divide 30
+    assert not shardable((32, 32, 32), 3, (2, 2, 1), p0=2)  # 2 !| R=3
+    c = choose_cp_grid((32, 32, 32), 4, 8)
+    assert c.grid == (2, 2, 2) and c.objective == "sweep"
+    # no 8-processor grid shards (6,6,6) evenly -> falls back to 6 procs
+    c = choose_cp_grid((6, 6, 6), 4, 8)
+    assert c.procs == 6
+    assert shardable((6, 6, 6), 4, c.grid)
+    assert choose_cp_grid((5, 3, 2), 4, 1).grid == (1, 1, 1)
+
+
+def test_validate_grid_errors():
+    with pytest.raises(ValueError, match="does not divide tensor extent"):
+        validate_grid((2, 2, 2), dims=(15, 16, 16))
+    with pytest.raises(ValueError, match="uneven factor shards"):
+        validate_grid((2, 2, 1), dims=(16, 16, 2))
+    with pytest.raises(ValueError, match="3-way but the tensor is 2-way"):
+        validate_grid((2, 2, 1), dims=(16, 16))
+    with pytest.raises(ValueError, match="does not divide R"):
+        validate_grid((1, 1, 1), p0=2, dims=(16, 16, 16), rank=3)
+    # rank check must not require dims (regression: it was nested under it)
+    with pytest.raises(ValueError, match="does not divide R"):
+        validate_grid((2, 2, 1), p0=2, rank=3, check_devices=False)
+    with pytest.raises(ValueError, match="positive ints"):
+        validate_grid((2, 0, 1))
+    with pytest.raises(ValueError, match="p0 must be"):
+        validate_grid((2, 2), p0=0)
+
+
+def test_make_grid_mesh_rejects_oversized_grid():
+    """Eager device-count check (the main pytest session sees 1 device)."""
+    with pytest.raises(ValueError, match="devices"):
+        make_grid_mesh((2, 2), dims=(4, 4))
+
+
+def test_make_grid_mesh_single_device_ok():
+    mesh = make_grid_mesh((1, 1, 1), dims=(8, 8, 8), rank=4)
+    assert mesh.axis_names == ("m0", "m1", "m2")

@@ -16,6 +16,9 @@ from repro.kernels.ops import (
 )
 from repro.kernels.ref import mttkrp_ref
 
+# interpret-mode kernel sweeps dominate the suite's wall time
+pytestmark = pytest.mark.slow
+
 SHAPES_3 = [
     (8, 8, 8),
     (16, 4, 32),

@@ -12,6 +12,9 @@ from repro.kernels.ssd_intra import (
     traffic_model,
 )
 
+# interpret-mode kernel sweeps dominate the suite's wall time
+pytestmark = pytest.mark.slow
+
 
 def _mk(bcn, q, n, h, p, seed=0, dtype=jnp.float32):
     ks = jax.random.split(jax.random.PRNGKey(seed), 5)

@@ -29,6 +29,9 @@ from repro.tune.search import (
     tune_mttkrp,
 )
 
+# empirical searches + interpret-mode kernel measurement are slow on CPU
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture
 def tuned_env(tmp_path, monkeypatch):
