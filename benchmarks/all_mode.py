@@ -45,10 +45,11 @@ def rows() -> list[tuple[str, float, str]]:
         t_ind = _time(lambda: all_mode_mttkrp(x, fs, method="independent"))
         t_tree = _time(lambda: all_mode_mttkrp(x, fs, method="dimtree"))
         # kernel-backed tree (interpret mode: schedule correctness + CPU time)
+        from repro import ExecutionContext
+
+        pal_ctx = ExecutionContext.create(backend="pallas", interpret=True)
         t_tree_pal = _time(
-            lambda: all_mode_mttkrp(
-                x, fs, method="dimtree", backend="pallas", interpret=True
-            ),
+            lambda: all_mode_mttkrp(x, fs, method="dimtree", ctx=pal_ctx),
             reps=1,
         )
         a = all_mode_mttkrp(x, fs, method="dimtree")

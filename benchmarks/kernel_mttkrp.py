@@ -36,8 +36,11 @@ def rows() -> list[tuple[str, float, str]]:
             jax.random.normal(k, (d, rank), jnp.float32)
             for k, d in zip(kf, dims)
         ]
+        from repro import ExecutionContext
+
+        pal_ctx = ExecutionContext.create(backend="pallas", interpret=True)
         t0 = time.perf_counter()
-        got = mttkrp(x, fs, 0, backend="pallas", interpret=True)
+        got = mttkrp(x, fs, 0, ctx=pal_ctx)
         jax.block_until_ready(got)
         dt = (time.perf_counter() - t0) * 1e6
         ref = mttkrp_ref(x, fs, 0)

@@ -5,16 +5,28 @@ PATH`` additionally writes a structured result file (schema-versioned,
 stamped with ``--commit``/``--timestamp`` passed by the caller) — the
 format the BENCH_*.json perf-trajectory files are built from.
 
+``--context PATH`` runs the harness under a serialized
+:class:`repro.ExecutionContext` (exported to ``REPRO_CONTEXT``, the seed
+every driver's default path reads) and stamps that *ambient* context
+JSON into every structured result row — a benchmark number without its
+execution environment is not reproducible. Rows produced by modules that
+deliberately pin a different fixed configuration for comparison (e.g.
+``kernel_mttkrp``'s pallas rows, ``tune``'s per-backend timings) name
+that configuration in their ``derived`` column; the recorded context is
+the environment the *harness* ran under.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.run [module ...]
     PYTHONPATH=src python -m benchmarks.run --json out.json \\
         --commit "$(git rev-parse HEAD)" --timestamp "$(date -u +%s)" tune
+    PYTHONPATH=src python -m benchmarks.run --context ctx.json --json out.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 MODULES = (
@@ -74,7 +86,21 @@ def main(argv: list[str] | None = None) -> None:
         "--timestamp", default=None,
         help="timestamp recorded in the JSON output (caller-provided)",
     )
+    ap.add_argument(
+        "--context", metavar="PATH", default=None,
+        help="run under this serialized repro.ExecutionContext (seeds "
+        "REPRO_CONTEXT, the default every bare driver call reads) and "
+        "record the ambient context in each JSON row",
+    )
     args = ap.parse_args(argv)
+
+    context_dict = None
+    if args.context:
+        from repro import ExecutionContext  # after PYTHONPATH=src
+
+        ctx = ExecutionContext.load(args.context)  # validates eagerly
+        context_dict = ctx.to_dict()
+        os.environ["REPRO_CONTEXT"] = ctx.to_json()
 
     want = set(args.modules) or set(MODULES)
     unknown = want - set(MODULES)
@@ -100,11 +126,15 @@ def main(argv: list[str] | None = None) -> None:
             sys.stdout.flush()
 
     if args.json:
+        if context_dict is not None:
+            for row in rows:  # every row records the ambient environment
+                row["context"] = context_dict
         payload = {
             "schema": JSON_SCHEMA_VERSION,
             "commit": args.commit,
             "timestamp": args.timestamp,
             "modules": sorted(want),
+            "context": context_dict,
             "results": rows,
         }
         with open(args.json, "w") as f:

@@ -88,16 +88,23 @@ def rows() -> list[tuple[str, float, str]]:
                 and r.variant == res.winner.variant
                 and r.block == res.winner.block
             )
-            fixed_us = {
-                b: _timed(
-                    lambda b=b: execute.mttkrp(
-                        x, fs, 0, backend=b, interpret=True
-                    )
-                )
+            from repro import ExecutionContext
+
+            # contexts hoisted out of the timed lambdas: construction/
+            # validation must not bias the fixed-vs-auto comparison
+            fixed_ctxs = {
+                b: ExecutionContext.create(b, interpret=True)
                 for b in ("einsum", "blocked_host", "pallas")
             }
+            fixed_us = {
+                b: _timed(
+                    lambda c=c: execute.mttkrp(x, fs, 0, ctx=c)
+                )
+                for b, c in fixed_ctxs.items()
+            }
+            auto_ctx = ExecutionContext.create(backend="auto")
             auto_us = _timed(
-                lambda: execute.mttkrp(x, fs, 0, backend="auto")
+                lambda: execute.mttkrp(x, fs, 0, ctx=auto_ctx)
             )
             worst = max(fixed_us.values())
             best = min(fixed_us.values())

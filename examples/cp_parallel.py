@@ -29,6 +29,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import ExecutionContext
 from repro.core.bounds import par_general_cost, par_stationary_cost
 from repro.core.cp_als import cp_als
 from repro.core.mttkrp import mttkrp
@@ -67,9 +68,18 @@ def grid_selection_demo(dims, rank):
 def sweep_driver_demo(x, rank, choice):
     dims = x.shape
     ndim = x.ndim
-    mesh = make_grid_mesh(choice.grid, dims=dims, rank=rank)
+    # the context-first API: ONE ExecutionContext carries the whole
+    # distributed environment; for_problem resolves + validates the grid
+    # eagerly and the context is the portable record of the setup
+    ctx = ExecutionContext.for_problem(
+        dims, rank, distributed=True, procs=len(jax.devices())
+    )
+    print(f"context grid: {'x'.join(map(str, ctx.distribution.grid))} "
+          f"(round-trips via to_json: "
+          f"{ExecutionContext.from_json(ctx.to_json()) == ctx})")
+    mesh = ctx.build_mesh(dims, rank)
     # measure one compiled sweep's collective bytes
-    sweep = build_cp_sweep(mesh, ndim)
+    sweep = build_cp_sweep(mesh, ndim, ctx=ctx)
     factors = random_factors(jax.random.PRNGKey(1), dims, rank)
     xs, fs, blocks, grams = place_cp_state(mesh, x, factors)
     normx = jax.device_put(frob_norm(x), NamedSharding(mesh, P()))
@@ -82,9 +92,8 @@ def sweep_driver_demo(x, rank, choice):
     print(f"per-sweep collective bytes: measured {measured}B, "
           f"model {model:.0f}B (+1 fit all-reduce), "
           f"N independent Eq(12) calls {indep:.0f}B")
-    # the actual decomposition, auto grid, through the core driver
-    res = cp_als(x, rank, n_iters=20, key=jax.random.PRNGKey(2),
-                 distributed=True)
+    # the actual decomposition through the core driver, same context
+    res = cp_als(x, rank, n_iters=20, key=jax.random.PRNGKey(2), ctx=ctx)
     recon = tensor_from_factors(res.factors, res.weights)
     print(f"distributed CP-ALS: fit={res.final_fit:.5f}, "
           f"recon rel-err={float(relative_error(x, recon)):.2e}\n")

@@ -1,9 +1,13 @@
 """Quickstart: CP decomposition with communication-optimal MTTKRP.
 
-Decomposes a synthetic low-rank tensor with CP-ALS through three MTTKRP
-backends — einsum, the explicit-Khatri-Rao matmul baseline (what the paper
-beats), and the Pallas blocked kernel (Algorithm 2 on TPU; interpret mode
-here) — and prints the paper's communication accounting for each.
+Context-first API: ONE immutable ``repro.ExecutionContext`` carries the
+full execution environment (backend, memory descriptor, interpret mode,
+tuning policy) and drives every driver. Decomposes a synthetic low-rank
+tensor with CP-ALS through three engine backends — einsum, the explicit
+Khatri-Rao matmul baseline (what the paper beats), and the Pallas blocked
+kernel (Algorithm 2 on TPU; interpret mode here) — prints the paper's
+communication accounting, then autotunes and shows the tuned setup
+round-tripping through JSON as a reproducible artifact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,11 +19,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
-from repro.core import bounds, cp_als
+import repro
+from repro.core import bounds
 from repro.core.krp import mttkrp_via_matmul
-from repro.core.mttkrp import mttkrp
 from repro.core.tensor import random_low_rank_tensor
-from repro.kernels.ops import mttkrp_pallas
 
 
 def main():
@@ -27,17 +30,23 @@ def main():
     print(f"tensor {dims}, CP rank {rank}")
     x, _ = random_low_rank_tensor(jax.random.PRNGKey(0), dims, rank)
 
-    backends = {
-        "einsum": mttkrp,
-        "krp_matmul_baseline": mttkrp_via_matmul,
-        "pallas_blocked_alg2": lambda t, f, n: mttkrp_pallas(
-            t, f, n, interpret=True
+    # one context per backend; the same ctx drives every MTTKRP of the run
+    contexts = {
+        "einsum": repro.ExecutionContext.create(backend="einsum"),
+        "pallas_blocked_alg2": repro.ExecutionContext.create(
+            backend="pallas", interpret=True
         ),
     }
-    for name, fn in backends.items():
-        res = cp_als(x, rank, n_iters=12, key=jax.random.PRNGKey(1),
-                     mttkrp_fn=fn)
+    for name, ctx in contexts.items():
+        res = repro.cp_als(
+            x, rank, n_iters=12, key=jax.random.PRNGKey(1), ctx=ctx
+        )
         print(f"  backend={name:22s} fit={res.final_fit:.5f}")
+    # a custom mttkrp_fn still overrides the engine (the paper's §VI-A
+    # matmul baseline is not an engine backend)
+    res = repro.cp_als(x, rank, n_iters=12, key=jax.random.PRNGKey(1),
+                       mttkrp_fn=mttkrp_via_matmul)
+    print(f"  backend={'krp_matmul_baseline':22s} fit={res.final_fit:.5f}")
 
     # the paper's sequential communication accounting: pick a fast memory
     # far smaller than the tensor so blocking matters (M = 4096 words)
@@ -60,9 +69,8 @@ def main():
     # cache normally lives at ~/.cache/repro-mttkrp/plans.json /
     # $REPRO_TUNE_CACHE; the demo redirects it to a throwaway file and
     # restores the env afterwards.)
-    from repro.engine import execute
     from repro.tune.cache import isolated_cache
-    from repro.tune.search import resolve, tune_mttkrp
+    from repro.tune.search import tune_mttkrp
 
     with isolated_cache():
         factors = [jax.random.normal(jax.random.PRNGKey(k), (d, rank))
@@ -70,11 +78,20 @@ def main():
         res = tune_mttkrp(x, factors, 0, interpret=True)  # cold: search once
         print(f"\nautotuner winner: {res.winner.label} "
               f"(metric={res.metric}, {len(res.measurements)} candidates)")
-        r = resolve(dims, rank, 0, x.dtype, None)         # warm: cache hit
-        print(f"  warm cache hit={r.cache_hit} -> backend={r.backend}")
-        b = execute.mttkrp(x, factors, 0, backend="auto")  # replays winner
-        print(f"  mttkrp(backend='auto') -> {b.shape}; later sessions "
-              f"replay the tuned plan from the cache, no re-search")
+        # for_problem pins every "auto" decision (one per mode) eagerly —
+        # drivers REPLAY them instead of re-resolving per call
+        ctx = repro.ExecutionContext.for_problem(dims, rank, backend="auto")
+        print("  pinned decisions:",
+              [(d.mode, d.backend, d.cache_hit) for d in ctx.decisions])
+        b0 = repro.mttkrp(x, factors, 0, ctx=ctx)  # replays the winner
+        print(f"  mttkrp(ctx) -> {b0.shape}")
+        # the tuned, validated setup is a portable artifact: JSON
+        # round-trip reproduces the identical plan resolutions anywhere
+        ctx2 = repro.ExecutionContext.from_json(ctx.to_json())
+        assert ctx2 == ctx and ctx2.decisions == ctx.decisions
+        print(f"  to_json/from_json round-trip OK "
+              f"({len(ctx.to_json())} bytes); set REPRO_CONTEXT or pass "
+              f"benchmarks/run.py --context to replay it")
 
 
 if __name__ == "__main__":

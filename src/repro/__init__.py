@@ -1,0 +1,47 @@
+"""repro: communication-optimal MTTKRP and CP decomposition.
+
+Reproduction and production-scale growth of *Communication Lower Bounds
+for Matricized Tensor Times Khatri-Rao Product* (Ballard, Knight, Rouse,
+cs.DC 2017) on the JAX/Pallas stack.
+
+The stable public surface (see ``docs/API.md``) is context-first: one
+immutable :class:`ExecutionContext` carries the full execution
+environment — backend, :class:`Memory`, dtype policy, interpret mode,
+tuning policy, and the :class:`Distribution` sub-config (grid / procs /
+mesh) — validated once and consumed by every driver::
+
+    import repro
+
+    ctx = repro.ExecutionContext.create(backend="auto")
+    result = repro.cp_als(x, rank=8, ctx=ctx)
+    b0 = repro.mttkrp(x, result.factors, 0, ctx=ctx)
+
+    ctx.to_json()                     # a portable, reproducible artifact
+    repro.ExecutionContext.from_json(s)   # ... replayed elsewhere
+
+Everything deeper (kernels, planner internals, the distributed shard_map
+programs, the tune subsystem) remains importable under its module path
+(``repro.engine``, ``repro.kernels``, ``repro.distributed``,
+``repro.tune``) but is not part of the frozen surface.
+"""
+
+from .engine.context import Distribution, ExecutionContext
+from .engine.execute import contract_partial, mttkrp
+from .engine.plan import BlockPlan, Memory
+from .core.cp_als import CPResult, cp_als, cp_gradient
+from .distributed.grid_select import select_grid
+
+__version__ = "0.4.0"
+
+__all__ = [
+    "ExecutionContext",
+    "Distribution",
+    "Memory",
+    "BlockPlan",
+    "mttkrp",
+    "contract_partial",
+    "cp_als",
+    "cp_gradient",
+    "CPResult",
+    "select_grid",
+]

@@ -3,8 +3,9 @@ application context — both are bottlenecked by MTTKRP).
 
 ``cp_als``  — alternating least squares with the standard Gram/Hadamard
 normal-equations solve; the per-mode MTTKRP may run through any backend
-(naive / einsum / blocked / Pallas kernel / distributed Alg 3/4), injected
-via ``mttkrp_fn``.
+(naive / einsum / blocked / Pallas kernel / distributed Alg 3/4), selected
+by the :class:`~repro.engine.context.ExecutionContext` (or injected via
+``mttkrp_fn``).
 
 ``cp_gradient`` — full-gradient descent (Adam) on 0.5*||X - [[A]]||_F^2 with
 the analytic gradient  dL/dA_n = A_n * Γ_n - MTTKRP(X, A, n), Γ_n the
@@ -13,6 +14,13 @@ Hadamard product of the other Grams — again MTTKRP-bottlenecked.
 Both use the efficient-fit identity
     ||X - recon||^2 = ||X||^2 - 2<B^(N-1), A^(N-1)> + 1^T (Γ ∘ A_N^T A_N) 1
 so the full tensor is reconstructed only implicitly.
+
+Configuration: both drivers take ``ctx: ExecutionContext`` — one object
+carrying backend/memory/interpret/tune and the Distribution sub-config
+(mesh/grid/procs). The legacy kwargs still work for one release through
+the deprecation shim; all option validation (backend names, tune x
+distributed, mttkrp_fn x distributed, ...) lives in
+:mod:`repro.engine.context`, not here.
 """
 
 from __future__ import annotations
@@ -26,7 +34,7 @@ import jax.numpy as jnp
 from .tensor import frob_norm, random_factors
 
 if TYPE_CHECKING:  # engine imports stay call-time-only (core <-> engine cycle)
-    from ..engine.plan import Memory
+    from ..engine.context import ExecutionContext
 
 MttkrpFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
 
@@ -84,55 +92,59 @@ def cp_als(
     mttkrp_fn: MttkrpFn | None = None,
     use_dimension_tree: bool = False,
     tol: float = 0.0,
-    backend: str = "einsum",
-    memory: "Memory | None" = None,
-    interpret: bool | None = None,
-    tune: bool = False,
-    distributed: bool = False,
+    *,
+    ctx: "ExecutionContext | None" = None,
+    backend=None,
+    memory=None,
+    interpret=None,
+    tune=None,
+    distributed=None,
     mesh=None,
-    grid: Sequence[int] | None = None,
-    procs: int | None = None,
+    grid=None,
+    procs=None,
 ) -> CPResult:
     """CP-ALS. One sweep = for each mode n: B = MTTKRP; solve the normal
     equations A_n = B (Γ_n)^+; column-normalize into weights λ.
 
-    Every MTTKRP goes through the engine: ``backend`` selects einsum /
-    blocked_host / pallas — or ``"auto"`` to resolve each contraction
-    through the autotuner's plan cache (``tune=True`` searches and
-    persists on the first sweep's misses; later sweeps and runs replay
-    the tuned plans). A custom ``mttkrp_fn`` (e.g. a distributed Alg 3/4
-    shard_map callable) overrides the engine for the plain path.
+    Every MTTKRP goes through the engine under ``ctx``: the backend
+    selects einsum / blocked_host / pallas — or ``"auto"`` to resolve
+    each contraction through the autotuner's plan cache (``ctx.tune``
+    searches and persists on the first sweep's misses; later sweeps and
+    runs replay the tuned plans). A custom ``mttkrp_fn`` (e.g. a
+    distributed Alg 3/4 shard_map callable) overrides the engine for the
+    plain path.
 
-    ``distributed=True`` (or passing ``mesh``/``grid``/``procs``) runs the
-    stationary-tensor sweep driver instead
+    ``ctx.distribution`` (or the legacy ``distributed=True`` /
+    ``mesh``/``grid``/``procs`` kwargs) runs the stationary-tensor sweep
+    driver instead
     (:func:`repro.distributed.cp_als_parallel.cp_als_parallel`): X is
     block-distributed over an automatically selected Eq (12)-optimal
     processor grid and each sweep is one shard_map program whose local
-    MTTKRPs still go through the engine ``backend``."""
-    if distributed or mesh is not None or grid is not None or procs is not None:
-        if mttkrp_fn is not None:
-            raise ValueError(
-                "mttkrp_fn cannot be combined with the distributed path "
-                "(the sweep driver owns the collectives)"
-            )
-        if use_dimension_tree:
-            raise ValueError(
-                "use_dimension_tree is not supported with distributed=True"
-            )
-        if tune:
-            raise ValueError(
-                "tune=True is not supported on the distributed path "
-                "(nothing can be measured under the shard_map trace); "
-                "pre-tune the local shard shapes with "
-                "engine.execute.mttkrp(..., tune=True), then run "
-                "distributed with backend='auto' to replay the cache"
-            )
+    MTTKRPs still go through the engine backend."""
+    from ..engine.context import (
+        UNSET,
+        check_driver_options,
+        context_from_legacy,
+    )
+
+    legacy = {
+        "backend": backend, "memory": memory, "interpret": interpret,
+        "tune": tune, "distributed": distributed, "mesh": mesh,
+        "grid": grid, "procs": procs,
+    }
+    ctx = context_from_legacy(
+        "repro.cp_als", ctx,
+        {k: (UNSET if v is None else v) for k, v in legacy.items()},
+    )
+    check_driver_options(
+        ctx, mttkrp_fn=mttkrp_fn, use_dimension_tree=use_dimension_tree
+    )
+    if ctx.is_distributed:
         from ..distributed.cp_als_parallel import cp_als_parallel
 
         return cp_als_parallel(
             x, rank, n_iters, key=key, init_factors=init_factors,
-            grid=grid, mesh=mesh, procs=procs, backend=backend,
-            interpret=interpret, memory=memory, tol=tol,
+            ctx=ctx, tol=tol,
         )
     n = x.ndim
     if init_factors is not None:
@@ -172,17 +184,11 @@ def cp_als(
 
     if mttkrp_fn is None:
         def mttkrp_fn(t, fs, mode):
-            return engine_execute.mttkrp(
-                t, fs, mode, backend=backend, memory=memory,
-                interpret=interpret, tune=tune,
-            )
+            return engine_execute.mttkrp(t, fs, mode, ctx=ctx)
 
     for it in range(n_iters):
         if use_dimension_tree:
-            dimtree_als_sweep(
-                x, factors, update, backend=backend, memory=memory,
-                interpret=interpret, tune=tune,
-            )
+            dimtree_als_sweep(x, factors, update, ctx=ctx)
         else:
             for mode in range(n):
                 factors[mode] = update(mode, mttkrp_fn(x, factors, mode))
@@ -205,27 +211,35 @@ def cp_gradient(
     lr: float = 0.05,
     key: jax.Array | None = None,
     mttkrp_fn: MttkrpFn | None = None,
-    backend: str = "einsum",
-    memory: "Memory | None" = None,
-    interpret: bool | None = None,
-    tune: bool = False,
+    *,
+    ctx: "ExecutionContext | None" = None,
+    backend=None,
+    memory=None,
+    interpret=None,
+    tune=None,
 ) -> CPResult:
     """Gradient-based CP (Adam on the analytic MTTKRP gradient).
 
     Engine parity with :func:`cp_als`: every MTTKRP goes through
-    ``engine.execute.mttkrp`` with the same ``backend``/``memory``/
-    ``interpret``/``tune`` knobs (it used to hardcode the naive einsum
-    default, so gradient CP never hit the Pallas kernels or tuned plans).
-    An explicit ``mttkrp_fn`` still overrides."""
+    ``engine.execute.mttkrp`` under the same ``ctx``
+    (backend/memory/interpret/tune). An explicit ``mttkrp_fn`` still
+    overrides."""
+    from ..engine.context import UNSET, context_from_legacy
+
+    legacy = {
+        "backend": backend, "memory": memory, "interpret": interpret,
+        "tune": tune,
+    }
+    ctx = context_from_legacy(
+        "repro.cp_gradient", ctx,
+        {k: (UNSET if v is None else v) for k, v in legacy.items()},
+    )
     n = x.ndim
     if mttkrp_fn is None:
         from ..engine import execute as engine_execute
 
         def mttkrp_fn(t, fs, mode):
-            return engine_execute.mttkrp(
-                t, fs, mode, backend=backend, memory=memory,
-                interpret=interpret, tune=tune,
-            )
+            return engine_execute.mttkrp(t, fs, mode, ctx=ctx)
     key = key if key is not None else jax.random.PRNGKey(0)
     factors = random_factors(key, x.shape, rank, x.dtype)
     normx = frob_norm(x)

@@ -21,30 +21,37 @@ from typing import TYPE_CHECKING, Sequence
 import jax
 
 if TYPE_CHECKING:  # engine imports stay call-time-only (core <-> engine cycle)
-    from ..engine.plan import Memory
+    from ..engine.context import ExecutionContext
 
 
 def all_mode_mttkrp_dimtree(
     x: jax.Array,
     factors: Sequence[jax.Array],
     *,
-    backend: str = "einsum",
-    memory: "Memory | None" = None,
-    interpret: bool | None = None,
+    ctx: "ExecutionContext | None" = None,
+    backend=None,
+    memory=None,
+    interpret=None,
 ) -> list[jax.Array]:
     """All-mode MTTKRP via a binary dimension tree.
 
     Returns ``[B^(0), ..., B^(N-1)]`` identical (up to roundoff) to
     ``[mttkrp(x, factors, n) for n in range(N)]`` with ~half the flops for
-    N=3,4 and asymptotically fewer for larger N. ``backend='pallas'`` runs
-    every partial contraction on the blocked kernels.
+    N=3,4 and asymptotically fewer for larger N. ``ctx.backend='pallas'``
+    runs every partial contraction on the blocked kernels.
     """
+    from ..engine.context import UNSET, context_from_legacy
     from ..engine.tree import all_mode_mttkrp
 
-    return all_mode_mttkrp(
-        x, factors, method="dimtree", backend=backend, memory=memory,
-        interpret=interpret,
+    ctx = context_from_legacy(
+        "repro.core.all_mode_mttkrp_dimtree", ctx,
+        {
+            "backend": backend if backend is not None else UNSET,
+            "memory": memory if memory is not None else UNSET,
+            "interpret": interpret if interpret is not None else UNSET,
+        },
     )
+    return all_mode_mttkrp(x, factors, method="dimtree", ctx=ctx)
 
 
 def dimtree_als_sweep(
@@ -52,19 +59,26 @@ def dimtree_als_sweep(
     factors: list[jax.Array],
     update_fn,
     *,
-    backend: str = "einsum",
-    memory: "Memory | None" = None,
-    interpret: bool | None = None,
+    ctx: "ExecutionContext | None" = None,
+    backend=None,
+    memory=None,
+    interpret=None,
 ) -> None:
     """One ALS sweep with dimension-tree reuse, *exactly* matching the
     Gauss-Seidel order of plain ALS (see :mod:`repro.engine.tree` for the
     ordering argument). ``factors`` is updated in place."""
+    from ..engine.context import UNSET, context_from_legacy
     from ..engine.tree import dimtree_als_sweep as engine_sweep
 
-    engine_sweep(
-        x, factors, update_fn, backend=backend, memory=memory,
-        interpret=interpret,
+    ctx = context_from_legacy(
+        "repro.core.dimtree_als_sweep", ctx,
+        {
+            "backend": backend if backend is not None else UNSET,
+            "memory": memory if memory is not None else UNSET,
+            "interpret": interpret if interpret is not None else UNSET,
+        },
     )
+    engine_sweep(x, factors, update_fn, ctx=ctx)
 
 
 def dimtree_flops(dims: Sequence[int], rank: int) -> int:

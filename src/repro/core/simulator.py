@@ -59,8 +59,27 @@ class _FastMemory:
         assert self.resident >= 0
 
 
+def _resolve_mem(mem, ctx) -> int:
+    """The simulated fast-memory size M (words): explicit ``mem`` wins;
+    else ``ctx.memory`` (an :class:`~repro.engine.plan.Memory`, whose
+    word budget is the paper's abstract M)."""
+    if mem is not None:
+        if ctx is not None and ctx.memory is not None:
+            raise ValueError(
+                "pass either mem= or a ctx with a Memory, not both"
+            )
+        return int(mem)
+    if ctx is not None and ctx.memory is not None:
+        return ctx.memory.budget_words
+    raise ValueError(
+        "no fast-memory size: pass mem=M (words) or a ctx built with "
+        "ExecutionContext.create(memory=Memory.abstract(M))"
+    )
+
+
 def simulate_unblocked(
-    x: np.ndarray, factors: Sequence[np.ndarray], mode: int, mem: int
+    x: np.ndarray, factors: Sequence[np.ndarray], mode: int,
+    mem: int | None = None, *, ctx=None,
 ) -> SimResult:
     """Algorithm 1 (§V-A), executed with explicit load/store counting.
 
@@ -68,6 +87,7 @@ def simulate_unblocked(
     load and one store of B. The R-loop arithmetic is vectorized but the
     counters follow the pseudocode exactly.
     """
+    mem = _resolve_mem(mem, ctx)
     n = x.ndim
     rank = next(f.shape[1] for k, f in enumerate(factors) if k != mode)
     if mem < n + 2:
@@ -98,16 +118,21 @@ def simulate_blocked(
     x: np.ndarray,
     factors: Sequence[np.ndarray],
     mode: int,
-    mem: int,
+    mem: int | None = None,
     block: int | None = None,
+    *,
+    ctx=None,
 ) -> SimResult:
     """Algorithm 2 (§V-B), executed with explicit load/store counting.
 
     Blocks every tensor mode by ``block`` (chosen per Eq 9 if None). Per
     block: load the subtensor once; for each r, load the N-1 factor
     subvectors and load+store the output subvector. Fast-memory residency is
-    tracked at true (edge-aware) sizes and must satisfy Eq (9).
+    tracked at true (edge-aware) sizes and must satisfy Eq (9). The M-word
+    budget comes from ``mem`` or from ``ctx.memory`` (see
+    :func:`_resolve_mem`).
     """
+    mem = _resolve_mem(mem, ctx)
     n = x.ndim
     dims = x.shape
     rank = next(f.shape[1] for k, f in enumerate(factors) if k != mode)

@@ -154,8 +154,9 @@ def build_cp_sweep(
     mesh: jax.sharding.Mesh,
     ndim: int,
     *,
-    backend: str = "einsum",
-    interpret: bool | None = None,
+    ctx=None,
+    backend=None,
+    interpret=None,
     memory=None,
     local_fn: LocalFn | None = None,
     compute_fit: bool = True,
@@ -163,13 +164,23 @@ def build_cp_sweep(
     """Compile-ready sweep: ``f(x, factors, blocks, grams, normx) ->
     (factors, blocks, grams, weights, fit)`` with every operand in the
     carried distributed state layout (see :func:`place_cp_state`)."""
+    from ..engine.context import UNSET, context_from_legacy
+
+    ctx = context_from_legacy(
+        "repro.distributed.build_cp_sweep", ctx,
+        {
+            "backend": backend if backend is not None else UNSET,
+            "interpret": interpret if interpret is not None else UNSET,
+            "memory": memory if memory is not None else UNSET,
+        },
+    )
     if "r" in mesh.axis_names:
         raise ValueError(
             "the CP-ALS sweep keeps X stationary (Algorithm 3); rank-axis "
             "(p0>1) meshes are for single-mode mttkrp_general"
         )
     if local_fn is None:
-        local_fn = engine_local_fn(backend, interpret, memory)
+        local_fn = engine_local_fn(ctx)
     in_specs = (
         tensor_spec(ndim),
         tuple(factor_spec(ndim, k) for k in range(ndim)),
@@ -236,26 +247,62 @@ def cp_als_parallel(
     *,
     key: jax.Array | None = None,
     init_factors: Sequence[jax.Array] | None = None,
+    ctx=None,
     grid: Sequence[int] | None = None,
     mesh: jax.sharding.Mesh | None = None,
     procs: int | None = None,
-    backend: str = "einsum",
-    interpret: bool | None = None,
+    backend=None,
+    interpret=None,
     memory=None,
     tol: float = 0.0,
     compute_fit: bool = True,
 ) -> CPResult:
     """Distributed CP-ALS with automatic grid selection.
 
-    Grid resolution: an explicit ``mesh`` wins; else an explicit ``grid``
-    is validated against the tensor extents; else
+    Grid resolution (all read from ``ctx.distribution``; the legacy
+    ``grid``/``mesh``/``procs`` kwargs shim into one): an explicit
+    ``mesh`` wins; else an explicit ``grid`` is validated against the
+    tensor extents; else
     :func:`repro.distributed.grid_select.choose_cp_grid` picks the Eq (12)
     sweep-optimal evenly-sharding grid for ``procs`` (default: every
     available device).  Factors are returned in the same convention as
     :func:`repro.core.cp_als.cp_als` — column-normalized, with the scales
     in ``CPResult.weights`` (never folded in as well).
     """
+    from dataclasses import replace
+
+    from ..engine.context import (
+        UNSET,
+        Distribution,
+        context_from_legacy,
+    )
+
+    ctx = context_from_legacy(
+        "repro.distributed.cp_als_parallel", ctx,
+        {
+            "backend": backend if backend is not None else UNSET,
+            "interpret": interpret if interpret is not None else UNSET,
+            "memory": memory if memory is not None else UNSET,
+            "grid": grid if grid is not None else UNSET,
+            "mesh": mesh if mesh is not None else UNSET,
+            "procs": procs if procs is not None else UNSET,
+        },
+    )
+    if ctx.distribution is None:
+        # this driver IS the distributed path; a plain context means
+        # "select everything automatically" (re-validates, so tune=True
+        # still fails loudly here)
+        ctx = replace(ctx, distribution=Distribution())
+    if ctx.distribution.p0 != 1:
+        raise ValueError(
+            "the CP-ALS sweep keeps X stationary (Algorithm 3); rank-axis "
+            "(p0>1) contexts are for single-mode mttkrp_general"
+        )
     ndim = x.ndim
+    dist = ctx.distribution
+    mesh = dist.mesh if dist is not None else None
+    grid = dist.grid if dist is not None else None
+    procs = dist.procs if dist is not None else None
     choice: GridChoice | None = None
     if mesh is None:
         if grid is None:
@@ -269,7 +316,8 @@ def cp_als_parallel(
                 "cp_als_parallel keeps X stationary; pass a p0=1 grid mesh"
             )
         grid = tuple(
-            mesh.shape[mode_axis(k)] for k in range(len(mesh.axis_names))
+            mesh.shape[mode_axis(k)]
+            for k in range(len([n for n in mesh.axis_names if n != "r"]))
         )
         validate_grid(grid, dims=x.shape, rank=rank)
     if len(grid) != ndim:
@@ -283,8 +331,7 @@ def cp_als_parallel(
     normx = frob_norm(x)
 
     sweep = build_cp_sweep(
-        mesh, ndim, backend=backend, interpret=interpret, memory=memory,
-        compute_fit=compute_fit or tol > 0,
+        mesh, ndim, ctx=ctx, compute_fit=compute_fit or tol > 0,
     )
     xs, fs, blocks, grams = place_cp_state(mesh, x, factors)
     normx_dev = jax.device_put(normx, NamedSharding(mesh, P()))

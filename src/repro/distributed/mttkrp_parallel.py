@@ -37,28 +37,64 @@ LocalFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
 
 
 def engine_local_fn(
-    backend: str = "einsum",
-    interpret: bool | None = None,
+    ctx=None,
+    interpret=None,
     memory=None,
+    backend=None,
 ) -> LocalFn:
     """Per-processor MTTKRP through the engine's dispatch layer.
 
     This is the paper's separation of concerns made literal: Algorithms 3/4
     own the collectives; the *local* MTTKRP inside each shard is exactly the
     sequential problem, so it runs through the same engine (and, with
-    ``backend='pallas'``, the same blocked VMEM kernels) as the
+    ``ctx.backend == 'pallas'``, the same blocked VMEM kernels) as the
     single-device path. ``backend='auto'`` resolves against the autotuner's
     plan cache keyed by the *local shard* shape — tuned local plans apply
     inside shard_map because resolution is pure Python over static shapes
     (it happens once, at trace time; no measurement is attempted there).
+
+    ``ctx`` is an :class:`~repro.engine.context.ExecutionContext` (its
+    ``local()`` view is used — the collectives here are owned by the
+    algorithms, not the engine). A legacy backend *string* first argument
+    still works through the deprecation shim.
     """
     from ..engine import execute as engine_execute  # call-time: layer cycle
+    from ..engine.context import UNSET, context_from_legacy
+
+    if isinstance(ctx, str):  # old positional form: engine_local_fn("pallas")
+        if backend is not None:
+            raise TypeError(
+                "repro.distributed.engine_local_fn: backend given both "
+                "positionally and by keyword"
+            )
+        ctx, backend = None, ctx
+    if ctx is None and (
+        backend is not None or interpret is not None or memory is not None
+    ):
+        ctx = context_from_legacy(
+            "repro.distributed.engine_local_fn", None,
+            {
+                "backend": backend if backend is not None else UNSET,
+                "interpret": interpret if interpret is not None else UNSET,
+                "memory": memory if memory is not None else UNSET,
+            },
+        )
+    elif ctx is not None and (
+        backend is not None or interpret is not None or memory is not None
+    ):
+        raise TypeError(
+            "repro.distributed.engine_local_fn: pass either ctx= or the "
+            "legacy keyword arguments (backend, interpret, memory), not "
+            "both — the context already carries the full configuration"
+        )
+    elif ctx is None:
+        from ..engine.context import ExecutionContext
+
+        ctx = ExecutionContext.default()
+    local_ctx = ctx.local()
 
     def fn(x, factors, mode):
-        return engine_execute.mttkrp(
-            x, factors, mode, backend=backend, interpret=interpret,
-            memory=memory,
-        )
+        return engine_execute.mttkrp(x, factors, mode, ctx=local_ctx)
 
     return fn
 
@@ -140,28 +176,50 @@ def _stationary_local(
     )
 
 
+def _resolve_parallel_ctx(api: str, ctx, backend, interpret):
+    """Shared ctx/legacy resolution for the Alg 3/4 builders, plus the
+    replication-check policy: pallas_call has no shard_map replication
+    rule on older jax, so the (purely diagnostic) rep check is skipped
+    when the local body may contain a kernel ("auto" can resolve to
+    pallas at trace time). ``ctx.distribution.check_rep`` overrides."""
+    from ..engine.context import context_from_legacy
+
+    ctx = context_from_legacy(
+        api, ctx, {"backend": backend, "interpret": interpret},
+        stacklevel=4,
+    )
+    check_rep = ctx.backend not in ("pallas", "auto")
+    if ctx.distribution is not None and ctx.distribution.check_rep is not None:
+        check_rep = ctx.distribution.check_rep
+    return ctx, check_rep
+
+
 def mttkrp_stationary(
     mesh: jax.sharding.Mesh,
     mode: int,
     ndim: int,
     local_fn: LocalFn | None = None,
     *,
-    backend: str = "einsum",
-    interpret: bool | None = None,
+    ctx=None,
+    backend=None,
+    interpret=None,
 ):
     """Build the Alg-3 shard_map callable ``f(x, *factors_except_mode)``.
 
     The tensor never moves (stationary); only factor blocks are gathered and
     partial outputs reduce-scattered — per-processor volume Eq (12). The
-    local MTTKRP goes through the engine (``backend`` selects einsum /
-    blocked_host / pallas); an explicit ``local_fn`` overrides it.
+    local MTTKRP goes through the engine under ``ctx`` (the backend selects
+    einsum / blocked_host / pallas); an explicit ``local_fn`` overrides it.
     """
-    # pallas_call has no shard_map replication rule on older jax; skip the
-    # (purely diagnostic) rep check when the local body may contain a kernel
-    # ("auto" can resolve to pallas at trace time)
-    check_rep = backend not in ("pallas", "auto")
+    from ..engine.context import UNSET
+
+    ctx, check_rep = _resolve_parallel_ctx(
+        "repro.distributed.mttkrp_stationary", ctx,
+        backend if backend is not None else UNSET,
+        interpret if interpret is not None else UNSET,
+    )
     if local_fn is None:
-        local_fn = engine_local_fn(backend, interpret)
+        local_fn = engine_local_fn(ctx)
     in_specs = (tensor_spec(ndim),) + tuple(
         factor_spec(ndim, k) for k in range(ndim) if k != mode
     )
@@ -221,8 +279,9 @@ def mttkrp_general(
     ndim: int,
     local_fn: LocalFn | None = None,
     *,
-    backend: str = "einsum",
-    interpret: bool | None = None,
+    ctx=None,
+    backend=None,
+    interpret=None,
 ):
     """Build the Alg-4 shard_map callable ``f(x, *factors_except_mode)``.
 
@@ -230,9 +289,15 @@ def mttkrp_general(
     Alg 3 is the special case p0 == 1 (the 'r' collectives degenerate).
     The local MTTKRP goes through the engine like :func:`mttkrp_stationary`.
     """
-    check_rep = backend not in ("pallas", "auto")
+    from ..engine.context import UNSET
+
+    ctx, check_rep = _resolve_parallel_ctx(
+        "repro.distributed.mttkrp_general", ctx,
+        backend if backend is not None else UNSET,
+        interpret if interpret is not None else UNSET,
+    )
     if local_fn is None:
-        local_fn = engine_local_fn(backend, interpret)
+        local_fn = engine_local_fn(ctx)
     in_specs = (tensor_spec(ndim, rank_split_mode=0),) + tuple(
         factor_spec(ndim, k, rank_axis=True)
         for k in range(ndim)

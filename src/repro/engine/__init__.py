@@ -9,10 +9,21 @@ numbers from the same :class:`~repro.engine.plan.BlockPlan` objects.
 Layering (see docs/ARCHITECTURE.md):
 
     plan      — Memory descriptors, BlockPlan, choose_blocks, Eq 9/10 models
-    execute   — mttkrp(x, factors, mode, backend=...) + partial contractions
+    context   — ExecutionContext: the one immutable config object + the
+                validation catalog + the deprecated-kwarg shim
+    execute   — mttkrp(x, factors, mode, ctx=...) + partial contractions
     tree      — all-mode MTTKRP / ALS sweeps over a binary dimension tree
 """
 
+from .context import (
+    VALID_BACKENDS,
+    Distribution,
+    ExecutionContext,
+    PlanDecision,
+    ProblemSpec,
+    check_backend,
+    check_driver_options,
+)
 from .plan import (
     LANE,
     SUBLANE,
@@ -29,6 +40,13 @@ from .execute import mttkrp, contract_partial, pallas_dispatch_count
 from .tree import all_mode_mttkrp, dimtree_als_sweep
 
 __all__ = [
+    "VALID_BACKENDS",
+    "Distribution",
+    "ExecutionContext",
+    "PlanDecision",
+    "ProblemSpec",
+    "check_backend",
+    "check_driver_options",
     "LANE",
     "SUBLANE",
     "VMEM_BUDGET",

@@ -1,0 +1,693 @@
+"""ExecutionContext: the one immutable configuration object for the stack.
+
+The paper's thesis is that a single machine description — fast-memory size
+M, processor count P, the processor grid — determines the optimal schedule
+for *every* MTTKRP in a CP run (Eq 9/10 sequentially, Eq 12/16 in
+parallel).  Three PRs in, that machine description had fragmented into a
+kwarg soup: every driver (``engine.execute.mttkrp``, ``contract_partial``,
+the dimension tree, ``cp_als``/``cp_gradient``, Algorithms 3/4, the
+distributed sweep) re-declared and re-validated
+``backend/memory/interpret/tune/check_rep/mesh/grid/procs`` with drifting
+error messages.  This module replaces all of that:
+
+* :class:`ExecutionContext` — a frozen, hashable dataclass bundling the
+  full execution environment: backend choice, :class:`~.plan.Memory`,
+  dtype policy, ``interpret``, the tuning policy (``tune`` + plan-cache
+  handle), and a :class:`Distribution` sub-config (grid/procs/mesh,
+  ``check_rep``).  Built once, validated once (eagerly, in
+  ``__post_init__`` — so every construction path validates), consumed
+  everywhere.
+* :meth:`ExecutionContext.create` — the single constructor every driver's
+  deprecated-kwarg shim routes through; *all* option validation lives
+  here (one error-message catalog, see :func:`check_backend` and
+  friends).
+* :meth:`ExecutionContext.for_problem` — eager ``"auto"`` resolution:
+  the processor grid is selected once (via
+  :func:`repro.distributed.grid_select.choose_cp_grid`) and the per-mode
+  plan decisions are resolved once against the tune cache, so drivers
+  *replay* decisions instead of re-deriving them per mode/iteration.
+* :meth:`ExecutionContext.to_json` / :meth:`~ExecutionContext.from_json`
+  — a tuned/validated setup is a portable artifact: benchmarks record
+  it, ``REPRO_CONTEXT`` (a path or an inline JSON string) seeds the
+  default context of a fresh process, and ``from_json(to_json(ctx))``
+  reproduces the identical plan resolutions.
+
+Layering: this module may import :mod:`.plan` at module scope; everything
+else (tune cache, grid selection, meshes) is imported inside methods so
+``core``/``distributed``/``tune`` can keep their call-time-only imports of
+the engine package.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Mapping, Sequence
+
+from .plan import BlockPlan, Memory
+
+SCHEMA = "repro.ExecutionContext/1"
+ENV_CONTEXT = "REPRO_CONTEXT"
+
+#: Concrete executors plus the autotuner-resolved pseudo-backend.
+VALID_BACKENDS = ("einsum", "blocked_host", "pallas", "auto")
+
+
+class _Unset:
+    """Sentinel distinguishing 'kwarg not passed' from an explicit value
+    (needed so the deprecation shims only fire on actual legacy usage)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+
+# ---------------------------------------------------------------------------
+# The validation catalog: ONE home for every option error in the stack
+# ---------------------------------------------------------------------------
+
+def check_backend(backend: str) -> None:
+    """The single backend validator (replaces ``execute._check_backend``
+    and the per-driver copies). Lists the valid values."""
+    if backend not in VALID_BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of "
+            f"{VALID_BACKENDS} (einsum/blocked_host/pallas run directly, "
+            f"'auto' resolves through the tune cache)"
+        )
+
+
+def _err_tune_distributed() -> ValueError:
+    return ValueError(
+        "tune=True is not supported on the distributed path "
+        "(nothing can be measured under the shard_map trace); "
+        "pre-tune the local shard shapes with "
+        "mttkrp(..., ctx=ExecutionContext.create(backend='auto', "
+        "tune=True)), then run distributed with backend='auto' to "
+        "replay the cache"
+    )
+
+
+def _err_mttkrp_fn_distributed() -> ValueError:
+    return ValueError(
+        "mttkrp_fn cannot be combined with the distributed path "
+        "(the sweep driver owns the collectives); drop mttkrp_fn or the "
+        "distributed options (distributed/mesh/grid/procs)"
+    )
+
+
+def _err_dimtree_distributed() -> ValueError:
+    return ValueError(
+        "use_dimension_tree is not supported with distributed=True "
+        "(the stationary sweep already amortizes factor gathers across "
+        "all modes); drop one of the two options"
+    )
+
+
+def check_driver_options(
+    ctx: "ExecutionContext",
+    *,
+    mttkrp_fn: Any = None,
+    use_dimension_tree: bool = False,
+) -> None:
+    """Validate per-call driver arguments that are not part of the context
+    (callables cannot be frozen/serialized) against it — the CP drivers'
+    entire option validation, unified."""
+    if ctx.is_distributed:
+        if mttkrp_fn is not None:
+            raise _err_mttkrp_fn_distributed()
+        if use_dimension_tree:
+            raise _err_dimtree_distributed()
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Distribution:
+    """The parallel-machine description (§V): processor grid, count, the
+    optional rank-axis extent ``p0`` (Algorithm 4), and the shard_map
+    replication-check policy.
+
+    ``mesh`` is a process-local device handle: it is excluded from
+    equality/hash/serialization (a context round-trips through JSON by its
+    *grid*; the mesh is rebuilt on the target process, where the device
+    topology may differ).
+    """
+
+    grid: tuple[int, ...] | None = None
+    procs: int | None = None
+    p0: int = 1
+    check_rep: bool | None = None
+    mesh: Any = field(default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.grid is not None:
+            object.__setattr__(self, "grid", tuple(int(g) for g in self.grid))
+            from ..distributed.mesh import validate_grid  # layer cycle
+
+            # device-count fit is checked when the mesh is built (the
+            # context itself must stay portable across machines)
+            validate_grid(self.grid, self.p0, check_devices=False)
+        if self.procs is not None and self.procs < 1:
+            raise ValueError(f"procs must be >= 1, got {self.procs}")
+        if self.p0 < 1:
+            raise ValueError(f"p0 must be >= 1, got {self.p0}")
+
+    def to_dict(self) -> dict:
+        return {
+            "grid": list(self.grid) if self.grid is not None else None,
+            "procs": self.procs,
+            "p0": self.p0,
+            "check_rep": self.check_rep,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Distribution":
+        grid = d.get("grid")
+        return cls(
+            grid=tuple(grid) if grid is not None else None,
+            procs=d.get("procs"),
+            p0=int(d.get("p0", 1)),
+            check_rep=d.get("check_rep"),
+        )
+
+
+@dataclass(frozen=True)
+class ProblemSpec:
+    """The (shape, rank, dtype) a context's decisions were resolved for."""
+
+    shape: tuple[int, ...]
+    rank: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+
+    def to_dict(self) -> dict:
+        return {"shape": list(self.shape), "rank": self.rank,
+                "dtype": self.dtype}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ProblemSpec":
+        return cls(tuple(d["shape"]), int(d["rank"]), str(d["dtype"]))
+
+
+@dataclass(frozen=True)
+class PlanDecision:
+    """One replayed ``backend="auto"`` resolution: how mode ``mode`` of the
+    pinned problem runs (backend, exact BlockPlan, kernel variant,
+    host-blocking size), and whether it came from the tune cache."""
+
+    mode: int
+    backend: str
+    plan: BlockPlan | None = None
+    variant: str | None = None
+    block: int | None = None
+    cache_hit: bool = False
+
+    def __post_init__(self):
+        # a decision is a RESOLVED choice: only concrete executors are
+        # legal (a corrupt/hand-edited "auto" here would otherwise fall
+        # through the dispatch layer into the pallas branch)
+        if self.backend not in ("einsum", "blocked_host", "pallas"):
+            raise ValueError(
+                f"PlanDecision backend must be a concrete executor "
+                f"(einsum/blocked_host/pallas), got {self.backend!r}"
+            )
+
+    def to_dict(self) -> dict:
+        plan = None
+        if self.plan is not None:
+            plan = {
+                "block_i": self.plan.block_i,
+                "block_contract": list(self.plan.block_contract),
+                "block_r": self.plan.block_r,
+                "x_has_rank": self.plan.x_has_rank,
+            }
+        return {
+            "mode": self.mode,
+            "backend": self.backend,
+            "plan": plan,
+            "variant": self.variant,
+            "block": self.block,
+            "cache_hit": self.cache_hit,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PlanDecision":
+        plan = d.get("plan")
+        if plan is not None:
+            plan = BlockPlan(
+                block_i=int(plan["block_i"]),
+                block_contract=tuple(int(c) for c in plan["block_contract"]),
+                block_r=int(plan["block_r"]),
+                x_has_rank=bool(plan.get("x_has_rank", False)),
+            )
+        return cls(
+            mode=int(d["mode"]),
+            backend=str(d["backend"]),
+            plan=plan,
+            variant=d.get("variant"),
+            block=d.get("block"),
+            cache_hit=bool(d.get("cache_hit", False)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# The context
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExecutionContext:
+    """The full execution environment, as one immutable, hashable value.
+
+    Prefer the constructors: :meth:`create` (validate everything eagerly),
+    :meth:`for_problem` (additionally resolve every ``"auto"`` choice —
+    grid, per-mode plans — exactly once), :meth:`from_json` /
+    :meth:`from_env` (replay a recorded setup).  Direct construction also
+    validates (``__post_init__``), so an invalid context cannot exist.
+    """
+
+    backend: str = "einsum"
+    memory: Memory | None = None
+    out_dtype: str | None = None
+    interpret: bool | None = None
+    tune: bool = False
+    cache_path: str | None = None
+    distribution: Distribution | None = None
+    problem: ProblemSpec | None = None
+    decisions: tuple[PlanDecision, ...] = ()
+
+    # -- eager validation (every construction path runs this) --------------
+    def __post_init__(self):
+        check_backend(self.backend)
+        if self.memory is not None and not isinstance(self.memory, Memory):
+            raise ValueError(
+                f"memory must be a repro.Memory (e.g. Memory.tpu_vmem() or "
+                f"Memory.abstract(words)), got {type(self.memory).__name__}"
+            )
+        if self.out_dtype is not None:
+            import jax.numpy as jnp
+
+            try:
+                jnp.dtype(self.out_dtype)
+            except TypeError as e:
+                raise ValueError(
+                    f"out_dtype {self.out_dtype!r} is not a dtype: {e}"
+                ) from None
+        if self.tune and self.is_distributed:
+            raise _err_tune_distributed()
+        if self.tune and self.backend != "auto":
+            raise ValueError(
+                f"tune=True requires backend='auto' (the search persists "
+                f"winners the auto path replays); got "
+                f"backend={self.backend!r}"
+            )
+        object.__setattr__(self, "decisions", tuple(self.decisions))
+        if self.decisions and self.problem is None:
+            raise ValueError(
+                "decisions without a problem spec: use for_problem(...) "
+                "to pin plan resolutions"
+            )
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def create(
+        cls,
+        backend: str = "einsum",
+        *,
+        memory: Memory | None = None,
+        out_dtype=None,
+        interpret: bool | None = None,
+        tune: bool = False,
+        cache_path: str | None = None,
+        distributed: bool = False,
+        mesh=None,
+        grid: Sequence[int] | None = None,
+        procs: int | None = None,
+        p0: int = 1,
+        check_rep: bool | None = None,
+    ) -> "ExecutionContext":
+        """Build and eagerly validate a context — THE constructor.
+
+        Any of ``distributed=True`` / ``mesh`` / ``grid`` / ``procs``
+        selects the distributed path (a :class:`Distribution` sub-config
+        is attached); an explicit ``mesh`` wins over ``grid`` wins over
+        automatic Eq (12) selection for ``procs`` processors.
+        """
+        dist = None
+        if distributed or mesh is not None or grid is not None \
+                or procs is not None:
+            if mesh is not None and grid is None:
+                # derive the grid from the mesh axes (m0..m{N-1}, opt. r)
+                names = [n for n in mesh.axis_names if n != "r"]
+                grid = tuple(mesh.shape[n] for n in names)
+                if "r" in mesh.axis_names:
+                    p0 = mesh.shape["r"]
+            dist = Distribution(
+                grid=tuple(grid) if grid is not None else None,
+                procs=procs, p0=p0, check_rep=check_rep, mesh=mesh,
+            )
+        if out_dtype is not None and not isinstance(out_dtype, str):
+            import jax.numpy as jnp
+
+            out_dtype = jnp.dtype(out_dtype).name
+        return cls(
+            backend=backend, memory=memory, out_dtype=out_dtype,
+            interpret=interpret, tune=tune, cache_path=cache_path,
+            distribution=dist,
+        )
+
+    @classmethod
+    def for_problem(
+        cls,
+        shape: Sequence[int],
+        rank: int,
+        dtype="float32",
+        **kwargs,
+    ) -> "ExecutionContext":
+        """:meth:`create` + resolve every ``"auto"`` choice for the given
+        problem, exactly once: the grid (Eq 12 sweep-optimal via
+        ``choose_cp_grid``) and — for ``backend="auto"`` without ``tune``
+        — the per-mode plan decisions from the tune cache (miss →
+        analytic model-best). Drivers then *replay* these decisions
+        instead of re-deriving them per mode/iteration. With
+        ``tune=True`` decisions stay unpinned: the empirical search runs
+        at the first driver call on concrete data and persists winners
+        the cache then replays."""
+        return cls.create(**kwargs).resolve_for(shape, rank, dtype)
+
+    def resolve_for(self, shape, rank: int, dtype="float32") \
+            -> "ExecutionContext":
+        """Pin this context to one problem: validate grid-vs-extent
+        feasibility, select an unresolved grid, check memory-vs-plan
+        feasibility, and resolve the per-mode ``"auto"`` decisions."""
+        import jax.numpy as jnp
+
+        shape = tuple(int(s) for s in shape)
+        dtype_name = jnp.dtype(dtype).name
+        problem = ProblemSpec(shape, int(rank), dtype_name)
+        dist = self.distribution
+        if dist is not None:
+            from ..distributed.grid_select import choose_cp_grid
+            from ..distributed.mesh import validate_grid
+
+            grid = dist.grid
+            if grid is None:
+                procs = dist.procs
+                if procs is None:
+                    import jax
+
+                    procs = len(jax.devices())
+                grid = choose_cp_grid(shape, rank, procs).grid
+            validate_grid(
+                grid, dist.p0, dims=shape, rank=rank, check_devices=False
+            )
+            dist = replace(dist, grid=tuple(grid))
+        decisions: tuple[PlanDecision, ...] = ()
+        if self.backend == "auto" and not self.tune and dist is None:
+            # tune=True deliberately pins NOTHING: the empirical search
+            # needs concrete data to measure, so it runs at the first
+            # driver call (engine.execute's live path) and later calls
+            # replay the persisted winner from the cache. Pinning here
+            # would freeze the un-tuned model-best and the search would
+            # silently never happen. Distributed contexts pin only the
+            # grid: their engine work runs on per-SHARD shapes inside
+            # shard_map, so global-shape decisions could never replay.
+            from ..tune.search import resolve  # layer cycle
+
+            cache = self.plan_cache()
+            out = []
+            for mode in range(len(shape)):
+                perm = (shape[mode],) + tuple(
+                    s for k, s in enumerate(shape) if k != mode
+                )
+                r = resolve(
+                    perm, rank, mode, jnp.dtype(dtype_name), self.memory,
+                    cache=cache,
+                )
+                out.append(PlanDecision(
+                    mode, r.backend, r.plan, r.variant, r.block,
+                    r.cache_hit,
+                ))
+            decisions = tuple(out)
+        elif self.memory is not None:
+            # memory-vs-plan feasibility: the budget must admit SOME plan
+            from .plan import choose_blocks
+
+            plan = choose_blocks(
+                shape, rank, self.memory.itemsize, memory=self.memory
+            )
+            if not plan.fits(self.memory):
+                raise ValueError(
+                    f"memory budget {self.memory.budget_bytes}B admits no "
+                    f"Eq-9-feasible plan for shape={shape}, rank={rank} "
+                    f"(minimal working set "
+                    f"{plan.working_set_words() * self.memory.itemsize}B); "
+                    f"raise the budget or shrink the rank"
+                )
+        return replace(
+            self, distribution=dist, problem=problem, decisions=decisions
+        )
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def is_distributed(self) -> bool:
+        return self.distribution is not None
+
+    def decision_for(self, shape, rank: int, mode: int, dtype=None) \
+            -> PlanDecision | None:
+        """The pinned ``"auto"`` decision for ``mode`` — or None when this
+        context was not resolved for exactly this (shape, rank, dtype).
+        The dtype is part of the identity: a plan blocked for 4-byte items
+        must not replay on 8-byte data (Eq-9 working set doubles)."""
+        if self.problem is None:
+            return None
+        if self.problem.shape != tuple(shape) or self.problem.rank != rank:
+            return None
+        if dtype is not None:
+            import jax.numpy as jnp
+
+            if jnp.dtype(dtype).name != self.problem.dtype:
+                return None
+        for d in self.decisions:
+            if d.mode == mode:
+                return d
+        return None
+
+    def plan_cache(self):
+        """The tune-cache handle this context reads/writes
+        (``cache_path`` override, else the process default)."""
+        from ..tune.cache import PlanCache, default_cache  # layer cycle
+
+        if self.cache_path is not None:
+            return PlanCache(self.cache_path)
+        return default_cache()
+
+    def local(self) -> "ExecutionContext":
+        """The per-shard view of a distributed context: same engine knobs,
+        no distribution (the collectives are owned by the sweep driver;
+        inside each shard the problem is exactly the sequential one)."""
+        if self.distribution is None:
+            return self
+        return replace(
+            self, distribution=None, problem=None, decisions=()
+        )
+
+    def build_mesh(self, shape=None, rank: int | None = None):
+        """The device mesh for the distributed path (explicit mesh wins;
+        else built from the resolved grid — this is where device-count
+        feasibility is enforced, since it is machine-local)."""
+        if self.distribution is None:
+            raise ValueError(
+                "build_mesh() on a non-distributed context; pass "
+                "distributed=True / grid= / procs= to create()"
+            )
+        if self.distribution.mesh is not None:
+            return self.distribution.mesh
+        if self.distribution.grid is None:
+            raise ValueError(
+                "no grid resolved yet: call resolve_for(shape, rank) / "
+                "for_problem(...) first, or pass grid= explicitly"
+            )
+        from ..distributed.mesh import make_grid_mesh
+
+        return make_grid_mesh(
+            self.distribution.grid, p0=self.distribution.p0,
+            dims=shape, rank=rank,
+        )
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> dict:
+        mem = None
+        if self.memory is not None:
+            mem = {
+                "budget_bytes": self.memory.budget_bytes,
+                "lane": self.memory.lane,
+                "sublane": self.memory.sublane,
+                "itemsize": self.memory.itemsize,
+            }
+        return {
+            "schema": SCHEMA,
+            "backend": self.backend,
+            "memory": mem,
+            "out_dtype": self.out_dtype,
+            "interpret": self.interpret,
+            "tune": self.tune,
+            "cache_path": self.cache_path,
+            "distribution": (
+                self.distribution.to_dict()
+                if self.distribution is not None else None
+            ),
+            "problem": (
+                self.problem.to_dict() if self.problem is not None else None
+            ),
+            "decisions": [d.to_dict() for d in self.decisions],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ExecutionContext":
+        schema = d.get("schema", SCHEMA)
+        if schema != SCHEMA:
+            raise ValueError(
+                f"unsupported ExecutionContext schema {schema!r} "
+                f"(this build reads {SCHEMA!r})"
+            )
+        mem = d.get("memory")
+        if mem is not None:
+            mem = Memory(
+                budget_bytes=int(mem["budget_bytes"]),
+                lane=int(mem.get("lane", 1)),
+                sublane=int(mem.get("sublane", 1)),
+                itemsize=int(mem.get("itemsize", 4)),
+            )
+        dist = d.get("distribution")
+        prob = d.get("problem")
+        return cls(
+            backend=str(d.get("backend", "einsum")),
+            memory=mem,
+            out_dtype=d.get("out_dtype"),
+            interpret=d.get("interpret"),
+            tune=bool(d.get("tune", False)),
+            cache_path=d.get("cache_path"),
+            distribution=(
+                Distribution.from_dict(dist) if dist is not None else None
+            ),
+            problem=ProblemSpec.from_dict(prob) if prob is not None else None,
+            decisions=tuple(
+                PlanDecision.from_dict(x) for x in d.get("decisions", ())
+            ),
+        )
+
+    def to_json(self, *, indent: int | None = None) -> str:
+        """Serialize (portably — no device handles) for recording in
+        benchmark rows, files, or ``REPRO_CONTEXT``."""
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionContext":
+        """Inverse of :meth:`to_json`: ``from_json(ctx.to_json()) == ctx``
+        (the mesh handle, which is process-local, excepted)."""
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+
+    @classmethod
+    def load(cls, path: str) -> "ExecutionContext":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    @classmethod
+    def from_env(cls) -> "ExecutionContext | None":
+        """The ``REPRO_CONTEXT`` seed: a path to a context JSON file, or
+        the JSON text itself. None when the variable is unset."""
+        raw = os.environ.get(ENV_CONTEXT)
+        if not raw:
+            return None
+        if os.path.exists(raw):
+            return cls.load(raw)
+        return cls.from_json(raw)
+
+    @classmethod
+    def default(cls) -> "ExecutionContext":
+        """What a driver uses when handed neither ``ctx`` nor legacy
+        kwargs: the ``REPRO_CONTEXT`` seed if set, else the stock einsum
+        context. Memoized on the raw env value — bare driver calls in
+        hot loops must not re-read files or re-parse JSON."""
+        raw = os.environ.get(ENV_CONTEXT) or ""
+        cached = _DEFAULT_MEMO.get(raw)
+        if cached is None:
+            cached = cls.from_env() or cls()
+            _DEFAULT_MEMO.clear()  # env changed: old seeds are stale
+            _DEFAULT_MEMO[raw] = cached
+        return cached
+
+
+# ---------------------------------------------------------------------------
+# The deprecated-kwarg shim (one release of backward compatibility)
+# ---------------------------------------------------------------------------
+
+# memo for ExecutionContext.default(), keyed by the raw REPRO_CONTEXT value
+_DEFAULT_MEMO: dict[str, "ExecutionContext"] = {}
+
+_CREATE_KEYS = (
+    {f.name for f in fields(ExecutionContext)}
+    | {"distributed", "mesh", "grid", "procs", "p0", "check_rep"}
+) - {"distribution", "problem", "decisions"}
+
+
+def context_from_legacy(
+    api: str,
+    ctx: "ExecutionContext | None",
+    legacy: Mapping[str, Any],
+    *,
+    stacklevel: int = 3,
+) -> "ExecutionContext":
+    """Resolve one driver call's configuration: ``ctx`` if given, else a
+    context built from the legacy kwargs (with exactly one
+    :class:`DeprecationWarning` naming the new spelling), else the
+    process default.
+
+    ``legacy`` maps old kwarg names to values, with :data:`UNSET` marking
+    kwargs the caller did not pass — only actually-passed kwargs trigger
+    the warning, so ``mttkrp(x, factors, mode)`` stays silent.
+    """
+    used = {k: v for k, v in legacy.items() if v is not UNSET}
+    if ctx is not None:
+        if used:
+            raise TypeError(
+                f"{api}: pass either ctx= or the legacy keyword arguments "
+                f"({', '.join(sorted(used))}), not both — the context "
+                f"already carries the full configuration"
+            )
+        return ctx
+    if not used:
+        return ExecutionContext.default()
+    unknown = set(used) - _CREATE_KEYS
+    if unknown:  # pragma: no cover - shims only forward known keys
+        raise TypeError(f"{api}: unknown options {sorted(unknown)}")
+    warnings.warn(
+        f"{api}: passing execution options as keyword arguments "
+        f"({', '.join(sorted(used))}) is deprecated and will be removed "
+        f"in the next release; build one ExecutionContext instead — "
+        f"ctx = repro.ExecutionContext.create(...) and call "
+        f"{api}(..., ctx=ctx)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    return ExecutionContext.create(**used)

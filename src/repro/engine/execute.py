@@ -14,6 +14,14 @@ Backends
                     configuration. ``tune=True`` searches empirically on a
                     miss and persists the winner.
 
+Configuration comes in as ONE :class:`~repro.engine.context.ExecutionContext`
+(``ctx=``): backend, Memory, dtype policy, interpret, tuning policy. The
+legacy per-call kwargs (``backend=``/``memory=``/``interpret=``/``tune=``)
+still work for one release through the deprecation shim, which builds a
+context and warns. Per-problem *overrides* (``plan``, ``block``,
+``kernel_variant``, ``out_dtype``) stay explicit arguments: they pin one
+contraction's execution details, not the machine.
+
 :func:`contract_partial` is the engine's generalized contraction: any
 dimension-tree node (tensor x a subset of factors, optionally carrying the
 rank axis) is flattened to canonical form, planned, and dispatched through
@@ -33,6 +41,12 @@ import jax.numpy as jnp
 
 from ..core.blocked import mttkrp_blocked
 from ..core.mttkrp import mttkrp as _einsum_mttkrp
+from .context import (
+    UNSET,
+    ExecutionContext,
+    check_backend,
+    context_from_legacy,
+)
 from .plan import BlockPlan, Memory, best_uniform_block, choose_blocks
 
 BACKENDS = ("einsum", "blocked_host", "pallas")
@@ -54,67 +68,71 @@ def _count_pallas() -> None:
     _pallas_dispatches += 1
 
 
-def _check_backend(backend: str) -> None:
-    if backend not in BACKENDS:
-        raise ValueError(
-            f"unknown backend {backend!r}; expected one of "
-            f"{BACKENDS + ('auto',)}"
-        )
-
-
-def _mode_first(shape: Sequence[int], mode: int) -> tuple[int, ...]:
-    return (shape[mode],) + tuple(
-        s for k, s in enumerate(shape) if k != mode
-    )
-
-
 def mttkrp(
     x: jax.Array,
     factors: Sequence[jax.Array],
     mode: int,
     *,
-    backend: str = "einsum",
+    ctx: ExecutionContext | None = None,
     plan: BlockPlan | None = None,
-    memory: Memory | None = None,
     block: int | None = None,
-    interpret: bool | None = None,
     out_dtype=None,
     kernel_variant: str | None = None,
-    tune: bool = False,
+    backend=UNSET,
+    memory=UNSET,
+    interpret=UNSET,
+    tune=UNSET,
 ) -> jax.Array:
     """MTTKRP through the engine: ``B^(mode)(i, r)``.
 
-    ``plan`` pins explicit block sizes for the ``pallas`` backend;
-    ``memory`` makes the planner target a non-default budget; ``block``
-    sets the uniform host-blocking size for ``blocked_host`` (defaults to
-    the Eq-9 optimum for an abstract VMEM-word memory); ``kernel_variant``
-    forces the 3-way specialized vs N-way generic kernel for ``pallas``.
+    ``ctx`` is the execution environment (see
+    :class:`~repro.engine.context.ExecutionContext`); ``plan`` pins
+    explicit block sizes for the ``pallas`` backend; ``block`` sets the
+    uniform host-blocking size for ``blocked_host`` (defaults to the Eq-9
+    optimum for an abstract VMEM-word memory); ``kernel_variant`` forces
+    the 3-way specialized vs N-way generic kernel for ``pallas``.
 
-    ``backend="auto"`` consults the autotuner: a plan-cache hit replays
-    the tuned configuration exactly (no re-search); a miss uses the
-    analytic model-best. ``tune=True`` additionally runs the empirical
-    search on a miss and persists the winner (skipped under tracing,
-    where nothing can be timed — resolution itself is trace-safe).
+    ``ctx.backend == "auto"`` consults the autotuner: a context pinned via
+    ``ExecutionContext.for_problem`` replays its stored decision; else a
+    plan-cache hit replays the tuned configuration exactly (no re-search)
+    and a miss uses the analytic model-best. ``ctx.tune`` additionally
+    runs the empirical search on a miss and persists the winner (skipped
+    under tracing, where nothing can be timed — resolution itself is
+    trace-safe).
     """
+    ctx = context_from_legacy(
+        "repro.mttkrp", ctx,
+        {"backend": backend, "memory": memory, "interpret": interpret,
+         "tune": tune},
+    )
+    backend = ctx.backend
+    memory = ctx.memory
+    interpret = ctx.interpret
+    if out_dtype is None:
+        out_dtype = ctx.out_dtype
     if backend == "auto":
-        # lazy import: engine <-> tune layer cycle
-        from ..tune.search import _is_concrete, resolve, tune_mttkrp
-
-        if tune and _is_concrete(x):
-            tune_mttkrp(
-                x, factors, mode, memory=memory, interpret=interpret
-            )
         rank = next(
             f.shape[1] for k, f in enumerate(factors) if k != mode
         )
-        resolved = resolve(
-            _mode_first(x.shape, mode), rank, mode, x.dtype, memory
-        )
-        backend = resolved.backend
-        plan = plan if plan is not None else resolved.plan
-        block = block if block is not None else resolved.block
-        kernel_variant = kernel_variant or resolved.variant
-    _check_backend(backend)
+        decision = ctx.decision_for(x.shape, rank, mode, x.dtype)
+        if decision is None:
+            # lazy import: engine <-> tune layer cycle
+            from ..tune.search import _is_concrete, resolve, tune_mttkrp
+
+            if ctx.tune and _is_concrete(x):
+                tune_mttkrp(
+                    x, factors, mode, memory=memory, interpret=interpret,
+                    cache=ctx.plan_cache(),
+                )
+            decision = resolve(
+                _mode_first(x.shape, mode), rank, mode, x.dtype, memory,
+                cache=ctx.plan_cache(),
+            )
+        backend = decision.backend
+        plan = plan if plan is not None else decision.plan
+        block = block if block is not None else decision.block
+        kernel_variant = kernel_variant or decision.variant
+    check_backend(backend)
     if backend == "einsum":
         out = _einsum_mttkrp(x, factors, mode)
         return out.astype(out_dtype) if out_dtype is not None else out
@@ -145,6 +163,12 @@ def mttkrp(
     )
 
 
+def _mode_first(shape: Sequence[int], mode: int) -> tuple[int, ...]:
+    return (shape[mode],) + tuple(
+        s for k, s in enumerate(shape) if k != mode
+    )
+
+
 def contract_partial(
     node: jax.Array,
     factors: Sequence[jax.Array],
@@ -152,11 +176,12 @@ def contract_partial(
     drop: Sequence[int],
     has_rank: bool,
     *,
-    backend: str = "einsum",
-    memory: Memory | None = None,
-    interpret: bool | None = None,
+    ctx: ExecutionContext | None = None,
     plan: BlockPlan | None = None,
-    tune: bool = False,
+    backend=UNSET,
+    memory=UNSET,
+    interpret=UNSET,
+    tune=UNSET,
 ) -> jax.Array:
     """Contract the factors for ``drop`` out of a dimension-tree ``node``.
 
@@ -167,16 +192,25 @@ def contract_partial(
     Every such contraction is MTTKRP-shaped: kept modes flatten into the
     output axis, dropped modes are the contraction dims, and the dropped
     factors' Khatri-Rao structure is the weight. The ``pallas`` backend
-    plans each one against the memory descriptor and dispatches the blocked
+    plans each one against ``ctx.memory`` and dispatches the blocked
     kernels (the N-way generic kernel when the node has no rank axis yet,
     the rank-augmented partial kernel otherwise). ``plan`` pins explicit
-    block sizes for ``pallas``. ``backend="auto"`` resolves each edge
-    through the autotuner's plan cache (kind ``"partial"``), falling back
-    to the model-best configuration on a miss; ``tune=True`` searches the
-    edge empirically on a miss and persists the winner (skipped under
+    block sizes for ``pallas``. ``ctx.backend == "auto"`` resolves each
+    edge through the autotuner's plan cache (kind ``"partial"``), falling
+    back to the model-best configuration on a miss; ``ctx.tune`` searches
+    the edge empirically on a miss and persists the winner (skipped under
     tracing — resolution itself is trace-safe, so dimension-tree sweeps
     inside jit still work).
     """
+    ctx = context_from_legacy(
+        "repro.contract_partial", ctx,
+        {"backend": backend, "memory": memory, "interpret": interpret,
+         "tune": tune},
+    )
+    backend = ctx.backend
+    memory = ctx.memory
+    interpret = ctx.interpret
+    out_dtype = ctx.out_dtype  # same dtype policy as the plain path
     modes = tuple(modes)
     drop = tuple(drop)
     keep = tuple(m for m in modes if m not in drop)
@@ -185,10 +219,10 @@ def contract_partial(
         # lazy import: engine <-> tune layer cycle
         from ..tune.search import _is_concrete, resolve, tune_partial
 
-        if tune and _is_concrete(node):
+        if ctx.tune and _is_concrete(node):
             tune_partial(
                 node, factors, modes, drop, has_rank, memory=memory,
-                interpret=interpret,
+                interpret=interpret, cache=ctx.plan_cache(),
             )
         pos0 = {m: i for i, m in enumerate(modes)}
         canon_shape = (
@@ -196,12 +230,12 @@ def contract_partial(
         ) + tuple(node.shape[pos0[m]] for m in drop)
         resolved = resolve(
             canon_shape, factors[drop[0]].shape[1], 0, node.dtype, memory,
-            kind="partial", x_has_rank=has_rank,
+            kind="partial", x_has_rank=has_rank, cache=ctx.plan_cache(),
         )
         backend = resolved.backend
         if auto_plan is None:
             auto_plan = resolved.plan
-    _check_backend(backend)
+    check_backend(backend)
     if backend != "pallas":
         # Algorithm 2's schedule matters only below the einsum boundary
         # here; blocked_host partials fall back to einsum (the host-blocked
@@ -213,9 +247,10 @@ def contract_partial(
             ops.append(factors[m])
             subs.append(_L[m] + _RANK)
         sub_out = "".join(_L[m] for m in keep) + _RANK
-        return jnp.einsum(
+        out = jnp.einsum(
             ",".join(subs) + "->" + sub_out, *ops, optimize="optimal"
         )
+        return out.astype(out_dtype) if out_dtype is not None else out
 
     from ..kernels import ops as kernel_ops  # lazy: avoids import cycle
 
@@ -254,4 +289,5 @@ def contract_partial(
         out = kernel_ops.mttkrp_canonical_pallas(
             xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
         )
-    return out.reshape(keep_sizes + (rank,))
+    out = out.reshape(keep_sizes + (rank,))
+    return out.astype(out_dtype) if out_dtype is not None else out

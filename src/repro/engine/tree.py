@@ -8,9 +8,12 @@ contract the tensor once with each half's factors, and recurse.
 
 Every tree edge is MTTKRP-shaped (tensor x a subset of the factors'
 Khatri-Rao structure), so each one is planned and dispatched through
-:func:`repro.engine.execute.contract_partial` — with ``backend='pallas'``
-the whole sweep runs on the blocked VMEM/MXU kernels instead of einsum,
-with the same blocking discipline per partial contraction.
+:func:`repro.engine.execute.contract_partial` under ONE
+:class:`~repro.engine.context.ExecutionContext` — with
+``ctx.backend == 'pallas'`` the whole sweep runs on the blocked VMEM/MXU
+kernels instead of einsum, with the same blocking discipline per partial
+contraction. The legacy ``backend=/memory=/interpret=/tune=`` kwargs
+route through the deprecation shim.
 """
 
 from __future__ import annotations
@@ -19,19 +22,15 @@ from typing import Callable, Dict, Sequence
 
 import jax
 
+from .context import UNSET, ExecutionContext, context_from_legacy
 from .execute import contract_partial, mttkrp
-from .plan import Memory
 
 
 def _solve_tree(
     x: jax.Array,
     factors: Sequence[jax.Array],
     leaf_fn: Callable[[int, jax.Array], None],
-    *,
-    backend: str,
-    memory: Memory | None,
-    interpret: bool | None,
-    tune: bool = False,
+    ctx: ExecutionContext,
 ) -> None:
     """Walk the binary dimension tree, calling ``leaf_fn(mode, b)`` at each
     leaf with that mode's MTTKRP result.
@@ -53,9 +52,7 @@ def _solve_tree(
         for child, drop in ((left, right), (right, left)):
             solve(
                 contract_partial(
-                    node, factors, modes, drop, has_rank,
-                    backend=backend, memory=memory, interpret=interpret,
-                    tune=tune,
+                    node, factors, modes, drop, has_rank, ctx=ctx
                 ),
                 child, True,
             )
@@ -68,10 +65,11 @@ def all_mode_mttkrp(
     factors: Sequence[jax.Array],
     *,
     method: str = "dimtree",
-    backend: str = "einsum",
-    memory: Memory | None = None,
-    interpret: bool | None = None,
-    tune: bool = False,
+    ctx: ExecutionContext | None = None,
+    backend=UNSET,
+    memory=UNSET,
+    interpret=UNSET,
+    tune=UNSET,
 ) -> list[jax.Array]:
     """MTTKRP in every mode: ``[B^(0), ..., B^(N-1)]``.
 
@@ -79,24 +77,25 @@ def all_mode_mttkrp(
     ``method='dimtree'`` shares the upper-tree partial contractions
     (~2 tensor-sized contractions per sweep instead of N). Either way each
     contraction goes through the requested engine backend —
-    ``backend="auto"`` resolves every edge through the autotuner's plan
-    cache (see :mod:`repro.tune`).
+    ``ctx.backend == "auto"`` resolves every edge through the autotuner's
+    plan cache (see :mod:`repro.tune`).
     """
+    ctx = context_from_legacy(
+        "repro.engine.tree.all_mode_mttkrp", ctx,
+        {"backend": backend, "memory": memory, "interpret": interpret,
+         "tune": tune},
+    )
     n = x.ndim
     if method == "independent":
-        return [
-            mttkrp(
-                x, factors, m, backend=backend, memory=memory,
-                interpret=interpret, tune=tune,
-            )
-            for m in range(n)
-        ]
+        return [mttkrp(x, factors, m, ctx=ctx) for m in range(n)]
     if method != "dimtree":
-        raise ValueError(f"unknown method {method!r}")
+        raise ValueError(
+            f"unknown method {method!r}; expected 'dimtree' or "
+            f"'independent'"
+        )
     results: Dict[int, jax.Array] = {}
     _solve_tree(
-        x, factors, lambda mode, b: results.__setitem__(mode, b),
-        backend=backend, memory=memory, interpret=interpret, tune=tune,
+        x, factors, lambda mode, b: results.__setitem__(mode, b), ctx
     )
     return [results[m] for m in range(n)]
 
@@ -106,10 +105,11 @@ def dimtree_als_sweep(
     factors: list[jax.Array],
     update_fn: Callable[[int, jax.Array], jax.Array],
     *,
-    backend: str = "einsum",
-    memory: Memory | None = None,
-    interpret: bool | None = None,
-    tune: bool = False,
+    ctx: ExecutionContext | None = None,
+    backend=UNSET,
+    memory=UNSET,
+    interpret=UNSET,
+    tune=UNSET,
 ) -> None:
     """One ALS sweep with dimension-tree reuse, *exactly* matching the
     Gauss-Seidel order of plain ALS.
@@ -119,11 +119,13 @@ def dimtree_als_sweep(
     ordering argument), must return the new factor, and may maintain its
     own side state (grams, weights). ``factors`` is updated in place.
     """
+    ctx = context_from_legacy(
+        "repro.engine.tree.dimtree_als_sweep", ctx,
+        {"backend": backend, "memory": memory, "interpret": interpret,
+         "tune": tune},
+    )
 
     def leaf(mode: int, b: jax.Array) -> None:
         factors[mode] = update_fn(mode, b)
 
-    _solve_tree(
-        x, factors, leaf, backend=backend, memory=memory,
-        interpret=interpret, tune=tune,
-    )
+    _solve_tree(x, factors, leaf, ctx)

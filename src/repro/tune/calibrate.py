@@ -186,10 +186,12 @@ def calibrate(
             for k, d in zip(kf, dims)
         )
 
+        from ..engine.context import ExecutionContext
+
+        blocked_ctx = ExecutionContext.create(backend="blocked_host")
+
         def run(x, fs, _b=b):
-            return engine_execute.mttkrp(
-                x, fs, 0, backend="blocked_host", block=_b
-            )
+            return engine_execute.mttkrp(x, fs, 0, ctx=blocked_ctx, block=_b)
 
         compiled = jax.jit(run).lower(x, fs).compile()
         measured = _measured_bytes(compiled)

@@ -40,6 +40,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from ..engine.context import ExecutionContext
 from ..engine.plan import BlockPlan, Memory, choose_blocks, uniform_plan
 from .cache import CacheEntry, PlanCache, cache_key, default_cache, plan_to_dict
 
@@ -298,11 +299,14 @@ def measure_candidate(
             )["total_bytes"]
         )
 
+    cand_ctx = ExecutionContext.create(
+        backend=cand.backend, interpret=interpret
+    )
+
     def call():
         return engine_execute.mttkrp(
-            x, factors, mode, backend=cand.backend, plan=cand.plan,
+            x, factors, mode, ctx=cand_ctx, plan=cand.plan,
             block=cand.block, kernel_variant=cand.variant,
-            interpret=interpret,
         )
 
     return _measure_one(
@@ -324,6 +328,7 @@ def search(
     factors: Sequence[jax.Array],
     mode: int,
     *,
+    ctx: ExecutionContext | None = None,
     memory: Memory | None = None,
     metric: str = "auto",
     interpret: bool | None = None,
@@ -333,10 +338,14 @@ def search(
 ) -> TuneResult:
     """Measure the candidate space for one MTTKRP problem, return the winner.
 
-    ``metric="traffic"`` (the CPU fallback) pre-ranks pallas plans by
-    modeled traffic and times only the best one against the host
+    ``ctx`` supplies ``memory``/``interpret`` defaults (explicit arguments
+    win). ``metric="traffic"`` (the CPU fallback) pre-ranks pallas plans
+    by modeled traffic and times only the best one against the host
     executors; ``metric="walltime"`` times everything.
     """
+    if ctx is not None:
+        memory = memory if memory is not None else ctx.memory
+        interpret = interpret if interpret is not None else ctx.interpret
     metric = _resolve_metric(metric)
     perm_shape = (x.shape[mode],) + tuple(
         s for k, s in enumerate(x.shape) if k != mode
@@ -401,6 +410,7 @@ def tune_mttkrp(
     factors: Sequence[jax.Array],
     mode: int,
     *,
+    ctx: ExecutionContext | None = None,
     memory: Memory | None = None,
     cache: PlanCache | None = None,
     metric: str = "auto",
@@ -411,9 +421,15 @@ def tune_mttkrp(
 ) -> TuneResult:
     """Search (unless already cached) and persist the winner.
 
-    Idempotent: a warm cache short-circuits to the stored entry, so
-    ``backend="auto", tune=True`` in a loop searches exactly once.
+    ``ctx`` supplies ``memory``/``interpret``/cache-handle defaults
+    (explicit arguments win). Idempotent: a warm cache short-circuits to
+    the stored entry, so a ``backend="auto", tune=True`` context in a
+    loop searches exactly once.
     """
+    if ctx is not None:
+        memory = memory if memory is not None else ctx.memory
+        interpret = interpret if interpret is not None else ctx.interpret
+        cache = cache if cache is not None else ctx.plan_cache()
     cache = cache or default_cache()
     mem = memory or Memory.tpu_vmem(itemsize=x.dtype.itemsize)
     perm_shape = (x.shape[mode],) + tuple(
@@ -470,6 +486,7 @@ def tune_partial(
     drop: Sequence[int],
     has_rank: bool,
     *,
+    ctx: ExecutionContext | None = None,
     memory: Memory | None = None,
     cache: PlanCache | None = None,
     metric: str = "auto",
@@ -484,12 +501,17 @@ def tune_partial(
     (``kind="partial"`` cache entries — what ``contract_partial`` with
     ``backend="auto"`` resolves against).
 
-    Candidates: einsum vs the pallas partial kernels with the analytic
-    plan and its perturbations. Same metric semantics as :func:`search`;
-    idempotent like :func:`tune_mttkrp`.
+    ``ctx`` supplies ``memory``/``interpret``/cache-handle defaults
+    (explicit arguments win). Candidates: einsum vs the pallas partial
+    kernels with the analytic plan and its perturbations. Same metric
+    semantics as :func:`search`; idempotent like :func:`tune_mttkrp`.
     """
     from ..engine import execute as engine_execute  # call-time: layer cycle
 
+    if ctx is not None:
+        memory = memory if memory is not None else ctx.memory
+        interpret = interpret if interpret is not None else ctx.interpret
+        cache = cache if cache is not None else ctx.plan_cache()
     metric = _resolve_metric(metric)
     cache = cache or default_cache()
     mem = memory or Memory.tpu_vmem(itemsize=node.dtype.itemsize)
@@ -536,15 +558,20 @@ def tune_partial(
     timed, modeled_only = _split_for_metric(cands, metric, tm_bytes)
 
     reference = engine_execute.contract_partial(
-        node, factors, modes, drop, has_rank, backend="einsum"
+        node, factors, modes, drop, has_rank,
+        ctx=ExecutionContext.create(backend="einsum"),
     )
     jax.block_until_ready(reference)
 
     def call_for(c):
+        c_ctx = ExecutionContext.create(
+            backend=c.backend, interpret=interpret
+        )
+
         def call():
             return engine_execute.contract_partial(
-                node, factors, modes, drop, has_rank, backend=c.backend,
-                plan=c.plan, interpret=interpret,
+                node, factors, modes, drop, has_rank, ctx=c_ctx,
+                plan=c.plan,
             )
 
         return call

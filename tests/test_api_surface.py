@@ -1,0 +1,163 @@
+"""The stable public API surface (`import repro`) and the deprecation shim.
+
+Run in the CI fast lane as the API-stability gate: a PR that changes
+``repro.__all__``, drops a docstring, or breaks the one-release
+legacy-kwarg compatibility fails here before anything else.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+
+# the documented surface (docs/API.md) — change BOTH deliberately
+DOCUMENTED_SURFACE = [
+    "ExecutionContext",
+    "Distribution",
+    "Memory",
+    "BlockPlan",
+    "mttkrp",
+    "contract_partial",
+    "cp_als",
+    "cp_gradient",
+    "CPResult",
+    "select_grid",
+]
+
+
+def _problem(dims=(6, 5, 4), rank=3):
+    x = jax.random.normal(jax.random.PRNGKey(0), dims)
+    fs = [
+        jax.random.normal(jax.random.PRNGKey(k + 1), (d, rank))
+        for k, d in enumerate(dims)
+    ]
+    return x, fs
+
+
+# ---------------------------------------------------------------------------
+# surface shape
+# ---------------------------------------------------------------------------
+
+def test_all_matches_documented_surface():
+    assert list(repro.__all__) == DOCUMENTED_SURFACE
+
+
+def test_every_export_exists_and_is_documented():
+    for name in repro.__all__:
+        obj = getattr(repro, name)  # raises AttributeError on a bad export
+        assert obj.__doc__ and obj.__doc__.strip(), (
+            f"repro.{name} has no docstring"
+        )
+
+
+def test_every_exported_callable_has_docstring():
+    for name in repro.__all__:
+        obj = getattr(repro, name)
+        if callable(obj):
+            assert obj.__doc__ and len(obj.__doc__.strip()) > 20, (
+                f"repro.{name} is exported but under-documented"
+            )
+
+
+def test_package_has_version_and_module_doc():
+    assert repro.__doc__ and "ExecutionContext" in repro.__doc__
+    assert isinstance(repro.__version__, str) and repro.__version__
+
+
+# ---------------------------------------------------------------------------
+# the deprecated-kwarg shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_emit_exactly_one_deprecation_warning():
+    x, fs = _problem()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        repro.mttkrp(x, fs, 0, backend="einsum")
+    dep = [wi for wi in w if wi.category is DeprecationWarning]
+    assert len(dep) == 1, [str(wi.message) for wi in w]
+    msg = str(dep[0].message)
+    # the message must teach the new spelling
+    assert "ExecutionContext.create" in msg
+    assert "ctx=ctx" in msg
+    assert "backend" in msg  # names the offending kwarg(s)
+
+
+@pytest.mark.parametrize(
+    "call",
+    [
+        lambda x, fs: repro.cp_als(x, 2, n_iters=1, backend="einsum"),
+        lambda x, fs: repro.cp_gradient(x, 2, n_iters=1, backend="einsum"),
+        lambda x, fs: repro.contract_partial(
+            x, fs, (0, 1, 2), (2,), False, backend="einsum"
+        ),
+    ],
+    ids=["cp_als", "cp_gradient", "contract_partial"],
+)
+def test_every_driver_shims_legacy_kwargs(call):
+    x, fs = _problem()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        call(x, fs)
+    dep = [wi for wi in w if wi.category is DeprecationWarning]
+    assert len(dep) == 1
+    assert "ExecutionContext" in str(dep[0].message)
+
+
+def test_ctx_path_is_warning_free():
+    x, fs = _problem()
+    ctx = repro.ExecutionContext.create(backend="einsum")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        repro.mttkrp(x, fs, 0, ctx=ctx)
+        repro.cp_als(x, 2, n_iters=1, ctx=ctx)
+        repro.cp_gradient(x, 2, n_iters=1, ctx=ctx)
+
+
+def test_default_call_is_warning_free():
+    x, fs = _problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        repro.mttkrp(x, fs, 0)
+        repro.cp_als(x, 2, n_iters=1)
+
+
+def test_ctx_plus_legacy_kwargs_rejected():
+    x, fs = _problem()
+    ctx = repro.ExecutionContext.create()
+    with pytest.raises(TypeError, match="not both"):
+        repro.mttkrp(x, fs, 0, ctx=ctx, backend="einsum")
+
+
+def test_legacy_and_ctx_paths_agree():
+    x, fs = _problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = repro.mttkrp(x, fs, 0, backend="blocked_host")
+    ctx = repro.ExecutionContext.create(backend="blocked_host")
+    new = repro.mttkrp(x, fs, 0, ctx=ctx)
+    assert jnp.allclose(legacy, new)
+
+
+# ---------------------------------------------------------------------------
+# the unified validator (one error catalog, actionable messages)
+# ---------------------------------------------------------------------------
+
+def test_unknown_backend_lists_valid_values():
+    with pytest.raises(ValueError) as e:
+        repro.ExecutionContext.create(backend="cuda")
+    msg = str(e.value)
+    for valid in ("einsum", "blocked_host", "pallas", "auto"):
+        assert valid in msg
+
+
+def test_driver_and_context_raise_the_same_backend_error():
+    x, fs = _problem()
+    with pytest.raises(ValueError) as via_ctx:
+        repro.ExecutionContext.create(backend="nope")
+    with warnings.catch_warnings(), pytest.raises(ValueError) as via_driver:
+        warnings.simplefilter("ignore", DeprecationWarning)
+        repro.mttkrp(x, fs, 0, backend="nope")
+    assert str(via_ctx.value) == str(via_driver.value)

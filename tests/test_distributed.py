@@ -60,6 +60,7 @@ def dist_transcript():
         "cp_sweep_comm_beats_independent",
         "cp_auto_grid_driver",
         "cp_sweep_pallas_local",
+        "context_roundtrip_reproduces_sweep",
     ],
 )
 def test_distributed_check(dist_transcript, name):
