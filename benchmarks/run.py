@@ -37,6 +37,7 @@ MODULES = (
     "all_mode",         # engine: dimtree vs independent all-mode MTTKRP
     "kernel_mttkrp",    # Pallas Alg-2 kernel: correctness + traffic model
     "tune",             # autotuner: search, warm-cache replay, calibration
+    "tucker",           # Multi-TTM backends + Tucker/HOOI (arXiv:2207.10437)
     "lm_step",          # §Roofline: per-cell terms from the dry-run
 )
 

@@ -1,0 +1,107 @@
+"""Benchmark: Multi-TTM backends + Tucker/HOOI end-to-end (arXiv:2207.10437).
+
+Per case: wall time of one full-core Multi-TTM through each engine
+backend (einsum, the uniform-b blocked host schedule, the Pallas
+Kronecker kernel in interpret mode off-TPU), the planner's modeled
+traffic vs the blocked-cost oracle, Tucker/HOOI wall time per sweep, and
+the distributed sweep model (Multi-TTM-sweep-optimal grid from
+``distributed.grid_select`` and its per-processor words — the
+HLO-measured equivalent lives in tests/dist_worker.py).
+
+``REPRO_BENCH_TINY=1`` shrinks to one tiny shape for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+import repro
+from repro.core.bounds import multi_ttm_blocked_cost
+from repro.core.tensor import random_tucker_tensor
+from repro.distributed.grid_select import (
+    multi_ttm_sweep_words,
+    select_tucker_grid,
+)
+from repro.engine.plan import Memory, uniform_multi_ttm_plan
+
+CASES = [
+    ((48, 48, 48), (8, 6, 4)),
+    ((32, 32, 32, 32), (4, 4, 4, 4)),
+    ((96, 64, 32), (12, 8, 6)),
+]
+TINY_CASES = [((12, 10, 8), (4, 3, 2))]
+
+GRID_PROCS = 64
+MEM_WORDS = 4096
+
+
+def _time_call(fn, reps: int = 3) -> float:
+    jax.block_until_ready(fn())  # warmup/compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def rows() -> list[tuple[str, float, str]]:
+    tiny = os.environ.get("REPRO_BENCH_TINY") == "1"
+    cases = TINY_CASES if tiny else CASES
+    out = []
+    for dims, ranks in cases:
+        tag = "x".join(map(str, dims)) + "_R" + "x".join(map(str, ranks))
+        x, _, _ = random_tucker_tensor(jax.random.PRNGKey(0), dims, ranks)
+        mats = [
+            jax.random.normal(jax.random.PRNGKey(k + 1), (d, r))
+            for k, (d, r) in enumerate(zip(dims, ranks))
+        ]
+        backends = {
+            "einsum": repro.ExecutionContext.create(backend="einsum"),
+            "blocked_host": repro.ExecutionContext.create(
+                backend="blocked_host"
+            ),
+            "pallas": repro.ExecutionContext.create(
+                backend="pallas", interpret=True
+            ),
+        }
+        for name, ctx in backends.items():
+            us = _time_call(lambda c=ctx: repro.multi_ttm(x, mats, ctx=c))
+            out.append((f"multi_ttm[{tag}][{name}]", us, "core"))
+        # planner vs oracle: the uniform-b model is pinned exact
+        plan = uniform_multi_ttm_plan(dims, ranks[1:], Memory.abstract(
+            MEM_WORDS
+        ))
+        model = plan.model_words(dims)
+        oracle = multi_ttm_blocked_cost(dims, ranks[1:], plan.block_i)
+        out.append((
+            f"multi_ttm_model[{tag}]", 0.0,
+            f"b={plan.block_i} model_words={model} oracle={oracle:.0f} "
+            f"M={MEM_WORDS}",
+        ))
+        # Tucker/HOOI end-to-end
+        n_iters = 2 if tiny else 4
+        t0 = time.perf_counter()
+        res = repro.tucker_hooi(x, ranks, n_iters=n_iters)
+        jax.block_until_ready(res.core)
+        out.append((
+            f"tucker_hooi[{tag}]",
+            (time.perf_counter() - t0) / n_iters * 1e6,
+            f"fit={res.final_fit:.5f}",
+        ))
+        # distributed sweep model at P=GRID_PROCS
+        choice = select_tucker_grid(dims, ranks, GRID_PROCS)
+        out.append((
+            f"tucker_grid[{tag}][P={GRID_PROCS}]", 0.0,
+            f"grid={choice.grid} sweep_words="
+            f"{multi_ttm_sweep_words(dims, ranks, choice.grid):.0f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

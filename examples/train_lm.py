@@ -1,4 +1,13 @@
-"""End-to-end training driver: a ~100M-parameter qwen2-family model on the
+"""QUARANTINED SEED SCAFFOLDING — not part of the paper reproduction.
+
+This LM-training driver (and the `repro.models` / `repro.training` /
+`repro.launch` stack it exercises) came with the repo seed and is
+unrelated to the MTTKRP/Multi-TTM communication-bounds work; it is kept
+only to avoid churn. It is not documented in README's examples, not
+CI-smoked, and nothing in the paper stack imports it. See README.md
+§"Paper-relevant vs. seed leftovers".
+
+End-to-end training driver: a ~100M-parameter qwen2-family model on the
 synthetic bigram corpus, with the full substrate (microbatched step, AdamW,
 async checkpointing, restart recovery, straggler monitor).
 

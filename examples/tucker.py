@@ -1,0 +1,93 @@
+"""Tucker decomposition via Multi-TTM on the unified engine.
+
+The second workload the engine serves (after CP/MTTKRP): every HOOI mode
+update is a Multi-TTM ``Y^(k) = X x_{j != k} A_j^T`` — the kernel whose
+communication lower bounds arXiv:2207.10437 proves.  This example
+decomposes an exact multilinear-rank tensor through three backends
+(einsum, the blocked host schedule, the Pallas Kronecker kernel in
+interpret mode), prints the paper-style sequential accounting and the
+distributed grid selection, and shows the tuned context round-tripping
+through JSON.
+
+    PYTHONPATH=src python examples/tucker.py
+
+Set ``REPRO_EX_TINY=1`` for the CI-sized problem.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+import repro
+from repro.core import bounds
+from repro.core.tensor import random_tucker_tensor
+from repro.distributed.grid_select import (
+    multi_ttm_sweep_words,
+    select_tucker_grid,
+)
+
+TINY = os.environ.get("REPRO_EX_TINY") == "1"
+
+
+def main():
+    dims = (12, 10, 8) if TINY else (40, 36, 32)
+    ranks = (4, 3, 2) if TINY else (8, 6, 4)
+    n_iters = 3 if TINY else 8
+    print(f"tensor {dims}, Tucker ranks {ranks}")
+    x, _, _ = random_tucker_tensor(jax.random.PRNGKey(0), dims, ranks)
+
+    # one context per backend; the same ctx drives every Multi-TTM of the
+    # run (HOSVD init, each HOOI mode update, and the core contraction)
+    contexts = {
+        "einsum": repro.ExecutionContext.create(backend="einsum"),
+        "blocked_host": repro.ExecutionContext.create(
+            backend="blocked_host"
+        ),
+        "pallas_kronecker": repro.ExecutionContext.create(
+            backend="pallas", interpret=True
+        ),
+    }
+    for name, ctx in contexts.items():
+        res = repro.tucker_hooi(x, ranks, n_iters=n_iters, ctx=ctx)
+        print(f"  backend={name:18s} fit={res.final_fit:.5f}")
+
+    # the Multi-TTM sequential accounting (arXiv:2207.10437): pick a fast
+    # memory far smaller than the tensor so blocking matters
+    mem = 1024 if TINY else 4096
+    canon = dims  # kept-mode-first canonical problem (keep mode 0)
+    cranks = ranks[1:]
+    b = bounds.multi_ttm_best_block_size(canon, cranks, mem)
+    print(f"\nsequential Multi-TTM model (fast memory M = {mem} words):")
+    print(f"  lower bound (HBL + trivial I/O): "
+          f"{bounds.multi_ttm_seq_lb(canon, cranks, mem):,.0f} words")
+    print(f"  blocked schedule (b={b}):         "
+          f"{bounds.multi_ttm_blocked_cost(canon, cranks, b):,.0f} words")
+    print(f"  unblocked:                       "
+          f"{bounds.multi_ttm_unblocked_cost(canon, cranks):,.0f} words")
+
+    # distributed grid selection over the Multi-TTM sweep objective —
+    # the same branch-and-bound the CP driver uses, new cost terms
+    for procs in (4, 8):
+        choice = select_tucker_grid(dims, ranks, procs)
+        print(f"  P={procs}: sweep-optimal grid {choice.grid} "
+              f"({choice.words:,.0f} words/processor/sweep; model "
+              f"{multi_ttm_sweep_words(dims, ranks, choice.grid):,.0f})")
+
+    # a pinned Tucker context is a portable artifact, exactly like CP:
+    # for_problem with a rank TUPLE resolves the kind="multi_ttm"
+    # decisions (one per HOOI mode update, one for the core) exactly once
+    ctx = repro.ExecutionContext.for_problem(dims, ranks, backend="auto")
+    print("\npinned multi_ttm decisions:",
+          [(d.mode, d.backend, d.cache_hit) for d in ctx.decisions])
+    ctx2 = repro.ExecutionContext.from_json(ctx.to_json())
+    assert ctx2 == ctx and ctx2.decisions == ctx.decisions
+    res = repro.tucker_hooi(x, ranks, n_iters=2, ctx=ctx2)
+    print(f"  tucker_hooi(ctx from JSON) fit={res.final_fit:.5f} "
+          f"({len(ctx.to_json())} bytes round-tripped)")
+
+
+if __name__ == "__main__":
+    main()

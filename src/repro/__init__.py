@@ -1,8 +1,11 @@
-"""repro: communication-optimal MTTKRP and CP decomposition.
+"""repro: communication-optimal MTTKRP, CP, and Tucker decomposition.
 
 Reproduction and production-scale growth of *Communication Lower Bounds
 for Matricized Tensor Times Khatri-Rao Product* (Ballard, Knight, Rouse,
-cs.DC 2017) on the JAX/Pallas stack.
+cs.DC 2017) on the JAX/Pallas stack — extended to the Multi-TTM /
+Tucker workload whose analogous bounds are proved in arXiv:2207.10437
+(:func:`multi_ttm`, :func:`tucker_hooi`, :class:`MultiTTMPlan`,
+:func:`select_tucker_grid`).
 
 The stable public surface (see ``docs/API.md``) is context-first: one
 immutable :class:`ExecutionContext` carries the full execution
@@ -26,22 +29,28 @@ programs, the tune subsystem) remains importable under its module path
 """
 
 from .engine.context import Distribution, ExecutionContext
-from .engine.execute import contract_partial, mttkrp
-from .engine.plan import BlockPlan, Memory
+from .engine.execute import contract_partial, mttkrp, multi_ttm
+from .engine.plan import BlockPlan, Memory, MultiTTMPlan
 from .core.cp_als import CPResult, cp_als, cp_gradient
-from .distributed.grid_select import select_grid
+from .core.tucker import TuckerResult, tucker_hooi
+from .distributed.grid_select import select_grid, select_tucker_grid
 
-__version__ = "0.4.0"
+__version__ = "0.5.0"
 
 __all__ = [
     "ExecutionContext",
     "Distribution",
     "Memory",
     "BlockPlan",
+    "MultiTTMPlan",
     "mttkrp",
     "contract_partial",
+    "multi_ttm",
     "cp_als",
     "cp_gradient",
     "CPResult",
+    "tucker_hooi",
+    "TuckerResult",
     "select_grid",
+    "select_tucker_grid",
 ]

@@ -8,6 +8,7 @@ from .mttkrp import mttkrp, mttkrp_naive, mttkrp_all_modes
 from .krp import khatri_rao, mttkrp_via_matmul
 from .blocked import mttkrp_blocked
 from .cp_als import cp_als, cp_gradient, CPResult
+from .tucker import tucker_hooi, hosvd_init, ttm, TuckerResult
 from .dimension_tree import all_mode_mttkrp_dimtree, dimtree_als_sweep
 from . import bounds, grid, simulator, tensor
 
@@ -22,6 +23,10 @@ __all__ = [
     "cp_als",
     "cp_gradient",
     "CPResult",
+    "tucker_hooi",
+    "hosvd_init",
+    "ttm",
+    "TuckerResult",
     "all_mode_mttkrp_dimtree",
     "bounds",
     "grid",

@@ -1,4 +1,4 @@
-"""Algorithm 2 (sequential blocked MTTKRP) as a structured JAX computation.
+"""Algorithm 2 (sequential blocked MTTKRP/Multi-TTM) as structured JAX.
 
 This is the host-level, jit-compatible expression of the paper's blocked
 loop order: iterate over b x ... x b tensor blocks, and for each block
@@ -67,6 +67,56 @@ def mttkrp_blocked(
     out = jnp.einsum(spec, xb, *f_ops, optimize="optimal")
     out = out.reshape(-1, rank)
     return out[: dims[mode], :]
+
+
+def multi_ttm_blocked(
+    x: jax.Array,
+    matrices: Sequence[jax.Array],
+    keep: int | None,
+    block: int,
+) -> jax.Array:
+    """Blocked Multi-TTM with the Algorithm-2 loop order, as an einsum.
+
+    The tensor modes are decomposed into uniform ``block``-sized blocks
+    whose coordinates become explicit contraction indices, so XLA sees
+    exactly the blocked schedule of ``core.bounds.multi_ttm_blocked_cost``.
+    ``matrices[k]`` is ``(I_k, R_k)``; mode ``keep`` (if not None) is left
+    uncontracted and its matrix ignored.  Output modes keep their tensor
+    positions: ``(R_1, ..., I_keep, ..., R_N)``.
+    """
+    n = x.ndim
+    dims = x.shape
+    xp = _pad_to_multiple(x, block)
+    newshape = []
+    for d in xp.shape:
+        newshape += [d // block, block]
+    xb = xp.reshape(newshape)
+    t_sub = "".join(_L[2 * k] + _L[2 * k + 1] for k in range(n))
+    rank_l = "ABCDEFGH"
+    f_subs, f_ops, out_sub = [], [], ""
+    for k in range(n):
+        if k == keep:
+            out_sub += _L[2 * k] + _L[2 * k + 1]
+            continue
+        mk = matrices[k]
+        mp = jnp.pad(mk, ((0, (-mk.shape[0]) % block), (0, 0)))
+        f_ops.append(mp.reshape(mp.shape[0] // block, block, mk.shape[1]))
+        f_subs.append(_L[2 * k] + _L[2 * k + 1] + rank_l[k])
+        out_sub += rank_l[k]
+    spec = ",".join([t_sub] + f_subs) + "->" + out_sub
+    out = jnp.einsum(spec, xb, *f_ops, optimize="optimal")
+    if keep is not None:
+        # the kept mode contributes its (blk, in) axis pair at position
+        # `keep` (every earlier mode contributes one rank axis): merge the
+        # pair and slice the padding off
+        shape = out.shape
+        merged = (
+            shape[:keep] + (shape[keep] * shape[keep + 1],)
+            + shape[keep + 2:]
+        )
+        out = out.reshape(merged)
+        out = jax.lax.slice_in_dim(out, 0, dims[keep], axis=keep)
+    return out
 
 
 def mttkrp_blocked_reference_check(

@@ -23,6 +23,12 @@ Paper map
 ``matmul_seq_cost``     §VI-A baseline  O(I + IR/sqrt(M))
 ``matmul_par_cost``     §VI-B baseline (rectangular matmul, small/large P)
 =====================  =====================================================
+
+Multi-TTM (the Tucker/HOSVD kernel, arXiv:2207.10437) has its own section
+below: ``multi_ttm_seq_lb_*`` (the HBL memory bound and the trivial I/O
+bound), ``multi_ttm_{un,}blocked_cost`` + ``multi_ttm_blocked_feasible_b``
+(the Eq-9/Eq-10 analogs the engine's ``MultiTTMPlan`` is pinned against),
+and ``par_multi_ttm_cost`` (the stationary-tensor parallel cost).
 """
 
 from __future__ import annotations
@@ -222,6 +228,140 @@ def par_general_cost(
         w = math.ceil(d / pk) * math.ceil(rank / p0) / slice_sz
         total += (slice_sz - 1) * w
     return total
+
+
+# --------------------------------------------------------------------------
+# Multi-TTM (Tucker/HOSVD kernel) bounds and costs — arXiv:2207.10437
+# --------------------------------------------------------------------------
+#
+# Multi-TTM contracts an N-way tensor X (I_1 x ... x I_N) with matrices
+# A^(k) (I_k x R_k) along every mode (the Tucker core G = X x_1 A_1^T ...
+# x_N A_N^T) or along every mode but one (the HOOI workhorse
+# Y^(k) = X x_{j != k} A_j^T).  Al Daas, Ballard, Grigori, Kumar & Rouse
+# (arXiv:2207.10437) prove the analogous communication lower bounds and
+# optimal algorithms; the functions below are the repo's oracle for them,
+# in the same canonical form the engine plans: ``dims`` are the tensor
+# extents of the *contraction problem* (kept mode first), ``ranks`` are
+# the small dimensions R_d of the contracted modes only.
+
+def multi_ttm_seq_lb_memory(
+    dims: Sequence[int], ranks: Sequence[int], mem: int
+) -> float:
+    """Memory-dependent sequential Multi-TTM lower bound (HBL form).
+
+    The atomic computation is a (N + k)-dimensional loop nest of
+    I * R = prod(dims) * prod(ranks) multiplies; the HBL/Loomis-Whitney
+    exponents covering every loop index with the tensor (s=1/2), the
+    output (s=1/2), and each matrix (s=1/2) give per-segment ops
+    <= (2M)^{(k+2)/2} for k contracted modes, hence
+    W >= I*R*M / (2M)^{(k+2)/2} - M (the arXiv:2207.10437 Sec. 3
+    argument; for k = 1 this is the classical matmul bound
+    I*R / (2M)^{1/2} up to the additive M)."""
+    k = len(ranks)
+    ops = total_size(dims) * total_size(ranks)
+    return ops * mem / (2 * mem) ** ((k + 2) / 2) - mem
+
+
+def multi_ttm_seq_lb_trivial(
+    dims: Sequence[int], ranks: Sequence[int], mem: int
+) -> float:
+    """Trivial Multi-TTM I/O bound: touch X once, every matrix once, and
+    the output once — W >= I + sum_d C_d R_d + I_keep * prod(ranks) - 2M
+    (``dims[0]`` is the kept mode; ``dims[1:]`` pair with ``ranks``)."""
+    mats = sum(c * r for c, r in zip(dims[1:], ranks))
+    out = dims[0] * total_size(ranks)
+    return total_size(dims) + mats + out - 2 * mem
+
+
+def multi_ttm_seq_lb(
+    dims: Sequence[int], ranks: Sequence[int], mem: int
+) -> float:
+    """max of the two sequential Multi-TTM bounds (never negative)."""
+    return max(
+        multi_ttm_seq_lb_memory(dims, ranks, mem),
+        multi_ttm_seq_lb_trivial(dims, ranks, mem),
+        0.0,
+    )
+
+
+def multi_ttm_unblocked_cost(
+    dims: Sequence[int], ranks: Sequence[int]
+) -> float:
+    """Unblocked Multi-TTM upper bound (Algorithm-1 analog): per tensor
+    entry, read one row of each matrix (sum_d R_d) and update the output
+    subrow (2 * prod(ranks)): W <= I + I*(sum R_d + 2 prod R_d)."""
+    i = total_size(dims)
+    return i + i * (sum(ranks) + 2 * total_size(ranks))
+
+
+def multi_ttm_blocked_cost(
+    dims: Sequence[int], ranks: Sequence[int], block: int
+) -> float:
+    """Blocked Multi-TTM cost (the Eq-10 analog, arXiv:2207.10437 Sec. 5).
+
+    One pass over the tensor, plus per b^N block: the matrix subblocks
+    (b rows of each contracted matrix, b * sum R_d words) and one
+    load+store of the output subblock (2 * b * prod R_d — the kept-mode
+    rows of this block times the full Kronecker rank):
+    W = I + prod_k ceil(I_k/b) * b * (sum R_d + 2 prod R_d)."""
+    i = total_size(dims)
+    nblocks = 1
+    for d in dims:
+        nblocks *= math.ceil(d / block)
+    return i + nblocks * block * (sum(ranks) + 2 * total_size(ranks))
+
+
+def multi_ttm_blocked_feasible_b(
+    ndim: int, ranks: Sequence[int], block: int, mem: int
+) -> bool:
+    """Eq-9 analog for Multi-TTM: the blocked working set
+    b^N (tensor tile) + b*sum R_d (matrix tiles) + b^{N-1}*prod R_d
+    (Kronecker weight block) + b*prod R_d (output tile) must fit in M."""
+    r = 1
+    for x in ranks:
+        r *= x
+    ws = (
+        block ** ndim
+        + block * sum(ranks)
+        + block ** (ndim - 1) * r
+        + block * r
+    )
+    return ws <= mem
+
+
+def multi_ttm_best_block_size(
+    dims: Sequence[int], ranks: Sequence[int], mem: int
+) -> int:
+    """Largest uniform b feasible per :func:`multi_ttm_blocked_feasible_b`
+    (at least 1 — callers check feasibility of the b=1 working set)."""
+    n = len(dims)
+    b = max(1, int(mem ** (1.0 / n)))
+    while b > 1 and not multi_ttm_blocked_feasible_b(n, ranks, b, mem):
+        b -= 1
+    while multi_ttm_blocked_feasible_b(n, ranks, b + 1, mem):
+        b += 1
+    return max(1, b)
+
+
+def par_multi_ttm_cost(
+    dims: Sequence[int], ranks: Sequence[int], grid: Sequence[int]
+) -> float:
+    """Per-processor words of the stationary-tensor parallel Multi-TTM
+    computing the full core on an N-way grid (arXiv:2207.10437 Sec. 5
+    specialized to our X-stationary distribution): gather each matrix's
+    block-rows over its mode hyperslice (the Eq-12-shaped terms), then
+    all-reduce the local partial core (2(P-1)/P * prod R_k words)."""
+    procs = 1
+    for g in grid:
+        procs *= g
+    total = 0.0
+    for d, pk, r in zip(dims, grid, ranks):
+        w = math.ceil(d / pk) * r / (procs // pk)
+        total += (procs / pk - 1) * w
+    core = 1
+    for r in ranks:
+        core *= r
+    return total + 2 * (procs - 1) / procs * core
 
 
 def matmul_par_cost(dims: Sequence[int], rank: int, procs: int) -> float:

@@ -118,6 +118,28 @@ def random_low_rank_tensor(
     return tensor_from_factors(factors), factors
 
 
+def random_tucker_tensor(
+    key: jax.Array,
+    dims: Sequence[int],
+    ranks: Sequence[int],
+    dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array, list[jax.Array]]:
+    """An exact multilinear-rank-``ranks`` tensor ``G x_1 A_1 ... x_N A_N``
+    with orthonormal factors; returns ``(tensor, core, factors)``."""
+    dims = tuple(dims)
+    ranks = tuple(ranks)
+    keys = jax.random.split(key, len(dims) + 1)
+    core = jax.random.normal(keys[0], ranks, dtype=dtype)
+    factors = []
+    for k, (d, r) in enumerate(zip(dims, ranks)):
+        q, _ = jnp.linalg.qr(jax.random.normal(keys[k + 1], (d, r), dtype))
+        factors.append(q.astype(dtype))
+    out = core
+    for k, a in enumerate(factors):
+        out = jnp.moveaxis(jnp.tensordot(out, a, axes=((k,), (1,))), -1, k)
+    return out, core, factors
+
+
 def np_matricize(x: np.ndarray, mode: int) -> np.ndarray:
     """NumPy twin of :func:`matricize` (used by the sequential simulator)."""
     n = x.ndim

@@ -1,7 +1,13 @@
 """Distributed runtime: parallel MTTKRP algorithms, grid selection,
 the CP-ALS sweep driver, and HLO analysis."""
 
-from .mesh import make_grid_mesh, mode_axis, hyperslice_axes, validate_grid
+from .mesh import (
+    make_grid_mesh,
+    mode_axis,
+    hyperslice_axes,
+    validate_grid,
+    validate_tucker_grid,
+)
 from .mttkrp_parallel import (
     engine_local_fn,
     gather_factor,
@@ -16,6 +22,9 @@ from .mttkrp_parallel import (
 from .grid_select import (
     GridChoice,
     choose_cp_grid,
+    choose_tucker_grid,
+    select_tucker_grid,
+    multi_ttm_sweep_words,
     select_grid,
     select_general_grid,
     select_stationary_grid,
@@ -26,6 +35,13 @@ from .cp_als_parallel import (
     cp_als_parallel,
     place_cp_state,
 )
+from .tucker_parallel import (
+    build_tucker_sweep,
+    multi_ttm_stationary,
+    place_multi_ttm_inputs,
+    place_tucker_state,
+    tucker_hooi_parallel,
+)
 from .hlo import parse_collectives, collective_bytes, CollectiveSummary
 
 __all__ = [
@@ -33,6 +49,7 @@ __all__ = [
     "mode_axis",
     "hyperslice_axes",
     "validate_grid",
+    "validate_tucker_grid",
     "engine_local_fn",
     "gather_factor",
     "gather_factors",
@@ -44,6 +61,9 @@ __all__ = [
     "output_spec",
     "GridChoice",
     "choose_cp_grid",
+    "choose_tucker_grid",
+    "select_tucker_grid",
+    "multi_ttm_sweep_words",
     "select_grid",
     "select_general_grid",
     "select_stationary_grid",
@@ -51,6 +71,11 @@ __all__ = [
     "build_cp_sweep",
     "cp_als_parallel",
     "place_cp_state",
+    "build_tucker_sweep",
+    "multi_ttm_stationary",
+    "place_multi_ttm_inputs",
+    "place_tucker_state",
+    "tucker_hooi_parallel",
     "parse_collectives",
     "collective_bytes",
     "CollectiveSummary",

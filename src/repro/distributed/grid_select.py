@@ -22,9 +22,13 @@ tuples.  This module solves it exactly:
 
 The search is a branch-and-bound over divisor assignments (every Eq (12)/
 Eq (16) term is nonnegative, so a partial-sum ≥ incumbent prunes the
-subtree).  ``brute_force_stationary`` / ``brute_force_general`` enumerate
-every divisor tuple with no pruning; the tests pin ``select_*`` against
-them for P ≤ 64 on 3-way and 4-way shapes.
+subtree), factored as :func:`_search_separable` so new per-axis-separable
+objectives reuse it: ``select_tucker_grid`` / ``choose_tucker_grid`` run
+the same search over the Multi-TTM/Tucker sweep objective
+(:func:`multi_ttm_sweep_words`, arXiv:2207.10437).
+``brute_force_stationary`` / ``brute_force_general`` /
+``brute_force_tucker`` enumerate every divisor tuple with no pruning; the
+tests pin ``select_*`` against them for P ≤ 64 on 3-way and 4-way shapes.
 """
 
 from __future__ import annotations
@@ -153,22 +157,22 @@ def shardable(
 # Branch-and-bound search
 # --------------------------------------------------------------------------
 
-def _search_stationary(
+def _search_separable(
     dims: Sequence[int],
-    rank: int,
     procs: int,
-    mode: int | None,
-    require_divisible: bool,
-) -> GridChoice | None:
-    """Minimize Eq (12) (``mode=k``) or the sweep objective (``mode=None``)
-    over all N-way divisor tuples of ``procs``, pruning on partial sums."""
+    term,
+    feasible=None,
+) -> tuple[float, tuple[int, ...]] | None:
+    """The shared branch-and-bound: minimize ``sum_k term(k, p_k)`` over
+    all ordered divisor tuples of ``procs`` with ``p_k <= dims[k]``.
+
+    Every objective routed here (Eq 12 single-mode, the CP-ALS sweep sum,
+    the Multi-TTM/Tucker sweep sum) is a per-axis-separable sum of
+    nonnegative terms, so a partial sum >= the incumbent prunes the whole
+    subtree.  ``feasible`` (if given) accepts/rejects complete grids
+    (even-sharding restriction)."""
     n = len(dims)
     best: tuple[float, tuple[int, ...]] | None = None
-
-    def term(k: int, pk: int) -> float:
-        if mode is None:
-            return _sweep_term(dims[k], pk, rank, procs)
-        return _alg3_factor_words(dims[k], pk, rank, procs)
 
     def recurse(k: int, remaining: int, partial: float, acc: list[int]):
         nonlocal best
@@ -177,12 +181,12 @@ def _search_stationary(
         if k == n - 1:
             if remaining > dims[k]:  # degenerate: empty processors
                 return
-            cand = acc + [remaining]
-            if require_divisible and not shardable(dims, rank, cand):
+            cand = tuple(acc + [remaining])
+            if feasible is not None and not feasible(cand):
                 return
             cost = partial + term(k, remaining)
-            if best is None or (cost, tuple(cand)) < best:
-                best = (cost, tuple(cand))
+            if best is None or (cost, cand) < best:
+                best = (cost, cand)
             return
         for d in _divisors(remaining):
             if d > dims[k]:
@@ -190,6 +194,29 @@ def _search_stationary(
             recurse(k + 1, remaining // d, partial + term(k, d), acc + [d])
 
     recurse(0, procs, 0.0, [])
+    return best
+
+
+def _search_stationary(
+    dims: Sequence[int],
+    rank: int,
+    procs: int,
+    mode: int | None,
+    require_divisible: bool,
+) -> GridChoice | None:
+    """Minimize Eq (12) (``mode=k``) or the sweep objective (``mode=None``)
+    over all N-way divisor tuples of ``procs``."""
+
+    def term(k: int, pk: int) -> float:
+        if mode is None:
+            return _sweep_term(dims[k], pk, rank, procs)
+        return _alg3_factor_words(dims[k], pk, rank, procs)
+
+    feasible = (
+        (lambda cand: shardable(dims, rank, cand))
+        if require_divisible else None
+    )
+    best = _search_separable(dims, procs, term, feasible)
     if best is None:
         return None
     objective = "sweep" if mode is None else f"mode{mode}"
@@ -324,6 +351,122 @@ def choose_cp_grid(
         if choice is not None:
             return choice
     raise AssertionError("unreachable: P=1 always shards evenly")
+
+
+# --------------------------------------------------------------------------
+# Multi-TTM / Tucker (arXiv:2207.10437): sweep objective + grid selection
+# --------------------------------------------------------------------------
+
+def _rank_complement_products(ranks: Sequence[int]) -> list[int]:
+    """R-bar_k = prod_{j != k} R_j for every mode."""
+    total = math.prod(ranks)
+    return [total // r for r in ranks]
+
+
+def _tucker_term(d: int, pk: int, rbar: int, procs: int) -> float:
+    """One mode's per-sweep words in the stationary-tensor Tucker/HOOI
+    sweep (:mod:`repro.distributed.tucker_parallel`): the partial
+    Y^(k) block-rows are all-reduced over the mode-k hyperslice
+    (``2(q-1)/q * w`` with ``q = P/p_k``) and then all-gathered over the
+    mode-k fiber (``(p_k-1) * w``), where ``w = ceil(I_k/p_k) * R-bar_k``
+    is one processor's block of the kept-mode rows times the Kronecker
+    rank of the other modes.  Factor matrices travel nowhere: the
+    replicated eigenvector update leaves every processor holding all of
+    A^(k), so there is no Eq-12-style gather term."""
+    q = procs // pk
+    w = math.ceil(d / pk) * rbar
+    return (2 * (q - 1) / q + (pk - 1)) * w
+
+
+def multi_ttm_sweep_words(
+    dims: Sequence[int], ranks: Sequence[int], grid: Sequence[int]
+) -> float:
+    """Per-processor words of one Tucker/HOOI sweep (all N mode updates)
+    on the stationary-tensor distribution — the Multi-TTM analog of
+    :func:`stationary_sweep_words`, and the objective
+    :func:`select_tucker_grid` minimizes.  Measured from compiled HLO in
+    ``tests/dist_worker.py::check_tucker_sweep_comm_matches_model``."""
+    procs = math.prod(grid)
+    rbars = _rank_complement_products(ranks)
+    total = 0.0
+    for d, pk, rbar in zip(dims, grid, rbars):
+        total += _tucker_term(d, pk, rbar, procs)
+    return total
+
+
+def tucker_shardable(dims: Sequence[int], grid: Sequence[int]) -> bool:
+    """Whether the Tucker stationary distribution shards evenly
+    (delegates to :func:`repro.distributed.mesh.validate_tucker_grid`,
+    minus the device-count check)."""
+    from .mesh import validate_tucker_grid  # local: mesh must not import back
+
+    try:
+        validate_tucker_grid(grid, dims, check_devices=False)
+    except ValueError:
+        return False
+    return True
+
+
+def select_tucker_grid(
+    dims: Sequence[int],
+    ranks: Sequence[int],
+    procs: int,
+    require_divisible: bool = False,
+) -> GridChoice | None:
+    """The grid minimizing the Multi-TTM sweep objective for ``procs``
+    processors — the same branch-and-bound as the CP selectors, run over
+    :func:`multi_ttm_sweep_words`'s per-axis terms."""
+    dims = tuple(dims)
+    ranks = tuple(ranks)
+    rbars = _rank_complement_products(ranks)
+
+    def term(k: int, pk: int) -> float:
+        return _tucker_term(dims[k], pk, rbars[k], procs)
+
+    feasible = (
+        (lambda cand: tucker_shardable(dims, cand))
+        if require_divisible else None
+    )
+    best = _search_separable(dims, procs, term, feasible)
+    if best is None:
+        return None
+    return GridChoice(1, best[1], best[0], "tucker", "sweep")
+
+
+def choose_tucker_grid(
+    dims: Sequence[int], ranks: Sequence[int], procs: int
+) -> GridChoice:
+    """Grid for the distributed Tucker/HOOI sweep driver: the largest
+    processor count ≤ ``procs`` admitting an evenly-sharding grid, then
+    the sweep-minimal grid among them (the Multi-TTM mirror of
+    :func:`choose_cp_grid`).  Always succeeds: P=1 shards trivially."""
+    for p in range(procs, 0, -1):
+        choice = select_tucker_grid(dims, ranks, p, require_divisible=True)
+        if choice is not None:
+            return choice
+    raise AssertionError("unreachable: P=1 always shards evenly")
+
+
+def brute_force_tucker(
+    dims: Sequence[int],
+    ranks: Sequence[int],
+    procs: int,
+    require_divisible: bool = False,
+) -> GridChoice | None:
+    """Exhaustive Multi-TTM sweep minimum over every ordered divisor
+    tuple (test oracle for :func:`select_tucker_grid`; no pruning)."""
+    best: tuple[float, tuple[int, ...]] | None = None
+    for cand in _factorization_tuples(procs, len(dims)):
+        if any(c > d for c, d in zip(cand, dims)):
+            continue
+        if require_divisible and not tucker_shardable(dims, cand):
+            continue
+        cost = multi_ttm_sweep_words(dims, ranks, cand)
+        if best is None or (cost, cand) < best:
+            best = (cost, cand)
+    if best is None:
+        return None
+    return GridChoice(1, best[1], best[0], "tucker", "sweep")
 
 
 # --------------------------------------------------------------------------

@@ -89,6 +89,49 @@ def validate_grid(
             )
 
 
+def validate_tucker_grid(
+    grid: Sequence[int],
+    dims: Sequence[int] | None = None,
+    check_devices: bool = True,
+) -> None:
+    """Feasibility of the Tucker/Multi-TTM stationary distribution.
+
+    The Tucker sweep keeps X block-distributed over the N-way grid (so
+    ``P_k | I_k`` for even tensor shards) but carries the *factors
+    replicated* (they are tall-skinny ``I_k x R_k``; each shard slices
+    its own block rows locally), so the CP driver's factor-row-spreading
+    divisibility constraints do not apply.  This is the single source of
+    feasibility for ``grid_select.tucker_shardable``.
+    """
+    grid = tuple(grid)
+    if not grid or any(g < 1 or g != int(g) for g in grid):
+        raise ValueError(
+            f"grid must be a non-empty tuple of positive ints, got {grid}"
+        )
+    if dims is not None:
+        dims = tuple(dims)
+        if len(dims) != len(grid):
+            raise ValueError(
+                f"grid {grid} is {len(grid)}-way but the tensor is "
+                f"{len(dims)}-way ({dims})"
+            )
+        for k, (d, pk) in enumerate(zip(dims, grid)):
+            if d % pk:
+                raise ValueError(
+                    f"grid axis m{k}={pk} does not divide tensor extent "
+                    f"I_{k}={d}: X cannot be block-distributed evenly"
+                )
+    if check_devices:
+        total = math.prod(grid)
+        ndev = len(jax.devices())
+        if total > ndev:
+            raise ValueError(
+                f"grid {grid} needs {total} devices but only {ndev} are "
+                f"available (set --xla_force_host_platform_device_count "
+                f"or shrink the grid)"
+            )
+
+
 def make_grid_mesh(
     grid: Sequence[int],
     p0: int = 1,

@@ -31,12 +31,15 @@ from .plan import (
     VMEM_BYTES,
     BlockPlan,
     Memory,
+    MultiTTMPlan,
     best_uniform_block,
     choose_blocks,
+    choose_multi_ttm_blocks,
     mttkrp_traffic_model,
     uniform_block_feasible,
+    uniform_multi_ttm_plan,
 )
-from .execute import mttkrp, contract_partial, pallas_dispatch_count
+from .execute import mttkrp, contract_partial, multi_ttm, pallas_dispatch_count
 from .tree import all_mode_mttkrp, dimtree_als_sweep
 
 __all__ = [
@@ -53,12 +56,16 @@ __all__ = [
     "VMEM_BYTES",
     "BlockPlan",
     "Memory",
+    "MultiTTMPlan",
     "best_uniform_block",
     "choose_blocks",
+    "choose_multi_ttm_blocks",
+    "uniform_multi_ttm_plan",
     "mttkrp_traffic_model",
     "uniform_block_feasible",
     "mttkrp",
     "contract_partial",
+    "multi_ttm",
     "pallas_dispatch_count",
     "all_mode_mttkrp",
     "dimtree_als_sweep",

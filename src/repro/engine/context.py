@@ -46,7 +46,7 @@ import warnings
 from dataclasses import dataclass, field, fields, replace
 from typing import Any, Mapping, Sequence
 
-from .plan import BlockPlan, Memory
+from .plan import BlockPlan, Memory, MultiTTMPlan
 
 SCHEMA = "repro.ExecutionContext/1"
 ENV_CONTEXT = "REPRO_CONTEXT"
@@ -187,22 +187,37 @@ class Distribution:
 
 @dataclass(frozen=True)
 class ProblemSpec:
-    """The (shape, rank, dtype) a context's decisions were resolved for."""
+    """The (shape, rank, dtype) a context's decisions were resolved for.
+
+    ``rank`` is the CP rank (int) or — for a Multi-TTM/Tucker problem —
+    the tuple of per-mode Tucker ranks ``(R_1, ..., R_N)``."""
 
     shape: tuple[int, ...]
-    rank: int
+    rank: int | tuple[int, ...]
     dtype: str = "float32"
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        if isinstance(self.rank, (tuple, list)):
+            object.__setattr__(
+                self, "rank", tuple(int(r) for r in self.rank)
+            )
+
+    @property
+    def is_multi_ttm(self) -> bool:
+        return isinstance(self.rank, tuple)
 
     def to_dict(self) -> dict:
-        return {"shape": list(self.shape), "rank": self.rank,
+        rank = list(self.rank) if isinstance(self.rank, tuple) else self.rank
+        return {"shape": list(self.shape), "rank": rank,
                 "dtype": self.dtype}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "ProblemSpec":
-        return cls(tuple(d["shape"]), int(d["rank"]), str(d["dtype"]))
+        rank = d["rank"]
+        rank = tuple(int(r) for r in rank) if isinstance(rank, list) \
+            else int(rank)
+        return cls(tuple(d["shape"]), rank, str(d["dtype"]))
 
 
 @dataclass(frozen=True)
@@ -213,7 +228,7 @@ class PlanDecision:
 
     mode: int
     backend: str
-    plan: BlockPlan | None = None
+    plan: BlockPlan | MultiTTMPlan | None = None
     variant: str | None = None
     block: int | None = None
     cache_hit: bool = False
@@ -229,18 +244,15 @@ class PlanDecision:
             )
 
     def to_dict(self) -> dict:
-        plan = None
-        if self.plan is not None:
-            plan = {
-                "block_i": self.plan.block_i,
-                "block_contract": list(self.plan.block_contract),
-                "block_r": self.plan.block_r,
-                "x_has_rank": self.plan.x_has_rank,
-            }
+        # single source of plan (de)serialization: the tune cache's
+        # (pinned decisions and cache entries must never drift apart)
+        from ..tune.cache import plan_to_dict  # layer cycle
+
         return {
             "mode": self.mode,
             "backend": self.backend,
-            "plan": plan,
+            "plan": plan_to_dict(self.plan) if self.plan is not None
+            else None,
             "variant": self.variant,
             "block": self.block,
             "cache_hit": self.cache_hit,
@@ -248,18 +260,13 @@ class PlanDecision:
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "PlanDecision":
+        from ..tune.cache import plan_from_dict  # layer cycle
+
         plan = d.get("plan")
-        if plan is not None:
-            plan = BlockPlan(
-                block_i=int(plan["block_i"]),
-                block_contract=tuple(int(c) for c in plan["block_contract"]),
-                block_r=int(plan["block_r"]),
-                x_has_rank=bool(plan.get("x_has_rank", False)),
-            )
         return cls(
             mode=int(d["mode"]),
             backend=str(d["backend"]),
-            plan=plan,
+            plan=plan_from_dict(plan) if plan is not None else None,
             variant=d.get("variant"),
             block=d.get("block"),
             cache_hit=bool(d.get("cache_hit", False)),
@@ -387,21 +394,52 @@ class ExecutionContext:
         instead of re-deriving them per mode/iteration. With
         ``tune=True`` decisions stay unpinned: the empirical search runs
         at the first driver call on concrete data and persists winners
-        the cache then replays."""
+        the cache then replays.
+
+        ``rank`` may also be the tuple of per-mode Tucker ranks, pinning
+        a Multi-TTM/Tucker problem (see :meth:`resolve_for`)."""
         return cls.create(**kwargs).resolve_for(shape, rank, dtype)
 
-    def resolve_for(self, shape, rank: int, dtype="float32") \
+    def resolve_for(self, shape, rank, dtype="float32") \
             -> "ExecutionContext":
         """Pin this context to one problem: validate grid-vs-extent
         feasibility, select an unresolved grid, check memory-vs-plan
-        feasibility, and resolve the per-mode ``"auto"`` decisions."""
+        feasibility, and resolve the per-mode ``"auto"`` decisions.
+
+        ``rank`` is the CP rank (int) or the tuple of per-mode Tucker
+        ranks — the latter pins a Multi-TTM/Tucker problem instead: the
+        grid comes from the Multi-TTM sweep objective
+        (``choose_tucker_grid``) and the ``"auto"`` decisions are the
+        per-kept-mode ``kind="multi_ttm"`` resolutions (one per HOOI
+        mode update plus one for the full core, keyed ``mode=-1``)."""
         import jax.numpy as jnp
 
         shape = tuple(int(s) for s in shape)
         dtype_name = jnp.dtype(dtype).name
-        problem = ProblemSpec(shape, int(rank), dtype_name)
+        is_tucker = isinstance(rank, (tuple, list))
+        rank = tuple(int(r) for r in rank) if is_tucker else int(rank)
+        problem = ProblemSpec(shape, rank, dtype_name)
+        if is_tucker and len(rank) != len(shape):
+            raise ValueError(
+                f"Tucker ranks {rank} must give one rank per tensor mode "
+                f"({len(shape)} for shape {shape})"
+            )
         dist = self.distribution
-        if dist is not None:
+        if dist is not None and is_tucker:
+            from ..distributed.grid_select import choose_tucker_grid
+            from ..distributed.mesh import validate_tucker_grid
+
+            grid = dist.grid
+            if grid is None:
+                procs = dist.procs
+                if procs is None:
+                    import jax
+
+                    procs = len(jax.devices())
+                grid = choose_tucker_grid(shape, rank, procs).grid
+            validate_tucker_grid(grid, dims=shape, check_devices=False)
+            dist = replace(dist, grid=tuple(grid))
+        elif dist is not None:
             from ..distributed.grid_select import choose_cp_grid
             from ..distributed.mesh import validate_grid
 
@@ -418,6 +456,69 @@ class ExecutionContext:
             )
             dist = replace(dist, grid=tuple(grid))
         decisions: tuple[PlanDecision, ...] = ()
+        if is_tucker and self.backend == "auto" and not self.tune \
+                and dist is None:
+            from ..tune.search import resolve_multi_ttm  # layer cycle
+
+            cache = self.plan_cache()
+            out = []
+            for keep_key in (-1,) + tuple(range(len(shape))):
+                lead = 0 if keep_key == -1 else keep_key
+                canon = (shape[lead],) + tuple(
+                    s for k, s in enumerate(shape) if k != lead
+                )
+                contracted = tuple(
+                    r for k, r in enumerate(rank) if k != keep_key
+                )
+                r = resolve_multi_ttm(
+                    canon, contracted, keep_key, jnp.dtype(dtype_name),
+                    self.memory, cache=cache,
+                )
+                out.append(PlanDecision(
+                    keep_key, r.backend, r.plan, r.variant, r.block,
+                    r.cache_hit,
+                ))
+            decisions = tuple(out)
+            return replace(
+                self, distribution=dist, problem=problem,
+                decisions=decisions,
+            )
+        if is_tucker:
+            if self.memory is not None:
+                # the budget must admit SOME plan for EVERY Multi-TTM the
+                # Tucker/HOOI workload runs: each kept mode (whose kernel
+                # contracts the other N-1 ranks) and the full core
+                from .plan import choose_multi_ttm_blocks
+
+                for keep_key in (-1,) + tuple(range(len(shape))):
+                    lead = 0 if keep_key == -1 else keep_key
+                    canon = (shape[lead],) + tuple(
+                        s for k, s in enumerate(shape) if k != lead
+                    )
+                    kernel_ranks = tuple(
+                        r for k, r in enumerate(rank) if k != lead
+                    )
+                    plan = choose_multi_ttm_blocks(
+                        canon, kernel_ranks, self.memory.itemsize,
+                        memory=self.memory,
+                    )
+                    if not plan.fits(self.memory):
+                        what = (
+                            "the full core" if keep_key == -1
+                            else f"the keep={keep_key} HOOI update"
+                        )
+                        raise ValueError(
+                            f"memory budget {self.memory.budget_bytes}B "
+                            f"admits no feasible Multi-TTM plan for "
+                            f"{what} of shape={shape}, ranks={rank} "
+                            f"(minimal working set "
+                            f"{plan.working_set_words() * self.memory.itemsize}"
+                            f"B); raise the budget or shrink the ranks"
+                        )
+            return replace(
+                self, distribution=dist, problem=problem,
+                decisions=decisions,
+            )
         if self.backend == "auto" and not self.tune and dist is None:
             # tune=True deliberately pins NOTHING: the empirical search
             # needs concrete data to measure, so it runs at the first

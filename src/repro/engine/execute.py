@@ -27,6 +27,14 @@ dimension-tree node (tensor x a subset of factors, optionally carrying the
 rank axis) is flattened to canonical form, planned, and dispatched through
 the same backends — this is what lets the all-mode sweep run kernel-backed.
 
+:func:`multi_ttm` is the second workload class on the same dispatch
+skeleton (arXiv:2207.10437): the Tucker/HOSVD contraction of every mode
+(or every mode but one) with its own small-rank matrix.  The weight is a
+Kronecker product instead of a Khatri-Rao product, so the pallas path
+runs the dedicated :mod:`repro.kernels.multi_ttm` kernel under a
+:class:`~repro.engine.plan.MultiTTMPlan`, and ``backend="auto"``
+resolves ``kind="multi_ttm"`` tune-cache keys.
+
 The kernel imports are lazy: ``kernels.ops`` imports the planner from this
 package, so importing kernels first must not re-enter ``engine``.
 """
@@ -47,12 +55,20 @@ from .context import (
     check_backend,
     context_from_legacy,
 )
-from .plan import BlockPlan, Memory, best_uniform_block, choose_blocks
+from .plan import (
+    BlockPlan,
+    Memory,
+    MultiTTMPlan,
+    best_uniform_block,
+    choose_blocks,
+    choose_multi_ttm_blocks,
+)
 
 BACKENDS = ("einsum", "blocked_host", "pallas")
 
 _L = "abcdefghijklmnopqrstuvw"
 _RANK = "z"
+_RANKS = "ABCDEFGHIJ"  # per-mode Tucker rank letters (Multi-TTM einsum)
 
 # instrumentation: how many contractions were dispatched to the Pallas
 # kernels (tests assert the kernel path is actually taken)
@@ -290,4 +306,180 @@ def contract_partial(
             xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
         )
     out = out.reshape(keep_sizes + (rank,))
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+# ---------------------------------------------------------------------------
+# Multi-TTM (the Tucker/HOSVD kernel, arXiv:2207.10437)
+# ---------------------------------------------------------------------------
+
+def _multi_ttm_einsum(x, matrices, keep):
+    subs, ops, out = [_L[: x.ndim]], [x], ""
+    for k in range(x.ndim):
+        if k == keep:
+            out += _L[k]
+            continue
+        ops.append(matrices[k])
+        subs.append(_L[k] + _RANKS[k])
+        out += _RANKS[k]
+    return jnp.einsum(",".join(subs) + "->" + out, *ops, optimize="optimal")
+
+
+def _keep_first(shape: Sequence[int], keep: int) -> tuple[int, ...]:
+    """Canonical Multi-TTM problem shape: kept mode first (mode 0 when
+    the full core is computed — every mode is contracted either way)."""
+    return (shape[keep],) + tuple(
+        s for k, s in enumerate(shape) if k != keep
+    )
+
+
+def multi_ttm(
+    x: jax.Array,
+    matrices: Sequence[jax.Array],
+    keep: int | None = None,
+    *,
+    ctx: ExecutionContext | None = None,
+    plan: MultiTTMPlan | None = None,
+    block: int | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Multi-TTM through the engine: contract every tensor mode (or every
+    mode but ``keep``) with its matrix — the Tucker/HOSVD workhorse
+    (arXiv:2207.10437).
+
+    ``matrices[k]`` is ``(I_k, R_k)``; ``matrices[keep]`` is ignored (may
+    be ``None``).  ``keep=None`` computes the full core ``G = X x_1
+    A_1^T ... x_N A_N^T`` of shape ``(R_1, ..., R_N)``; ``keep=k``
+    computes the HOOI workhorse ``Y^(k) = X x_{j != k} A_j^T`` with the
+    kept mode staying in place: ``(R_1, ..., I_k, ..., R_N)``.
+
+    ``ctx`` is the same :class:`~repro.engine.context.ExecutionContext`
+    that drives :func:`mttkrp`: the backend selects einsum /
+    blocked_host (the uniform-b Algorithm-2 schedule; ``block``
+    overrides the Eq-9 optimum) / pallas (the blocked Kronecker-weight
+    kernel, planned against ``ctx.memory``; ``plan`` pins explicit
+    :class:`~repro.engine.plan.MultiTTMPlan` blocks) — or ``"auto"`` to
+    resolve through the autotuner's plan cache under ``kind=
+    "multi_ttm"`` keys (a context pinned via
+    ``ExecutionContext.for_problem(shape, ranks)`` replays its stored
+    decision; ``ctx.tune`` searches empirically on a miss and persists
+    the winner).
+    """
+    if ctx is None:
+        ctx = ExecutionContext.default()
+    n = x.ndim
+    if keep is not None and not 0 <= keep < n:
+        raise ValueError(f"keep mode {keep} out of range for {n}-way tensor")
+    if len(matrices) != n:
+        raise ValueError(
+            f"multi_ttm needs one matrix per tensor mode ({n}), got "
+            f"{len(matrices)} (pass None at the kept mode)"
+        )
+    for k, m in enumerate(matrices):
+        if k == keep:
+            continue
+        if m is None:
+            raise ValueError(
+                f"matrix {k} is None but mode {k} is contracted "
+                f"(only matrices[keep] may be None; keep={keep})"
+            )
+        if m.shape[0] != x.shape[k]:
+            raise ValueError(
+                f"matrix {k} has {m.shape[0]} rows but tensor mode {k} "
+                f"has extent {x.shape[k]}"
+            )
+    backend = ctx.backend
+    memory = ctx.memory
+    interpret = ctx.interpret
+    if out_dtype is None:
+        out_dtype = ctx.out_dtype
+    ranks = tuple(
+        m.shape[1] for k, m in enumerate(matrices) if k != keep
+    )
+    keep_key = -1 if keep is None else keep
+    canon = _keep_first(x.shape, 0 if keep is None else keep)
+    if backend == "auto":
+        # pinned Tucker contexts key decisions by the FULL per-mode rank
+        # tuple (the problem identity); a None matrix at the kept mode
+        # hides R_keep, so such calls just resolve live instead
+        decision = None
+        if all(m is not None for m in matrices):
+            full_ranks = tuple(m.shape[1] for m in matrices)
+            decision = ctx.decision_for(
+                x.shape, full_ranks, keep_key, x.dtype
+            )
+        if decision is None:
+            # lazy import: engine <-> tune layer cycle
+            from ..tune.search import (
+                _is_concrete,
+                resolve_multi_ttm,
+                tune_multi_ttm,
+            )
+
+            if ctx.tune and _is_concrete(x):
+                tune_multi_ttm(
+                    x, matrices, keep, memory=memory, interpret=interpret,
+                    cache=ctx.plan_cache(),
+                )
+            decision = resolve_multi_ttm(
+                canon, ranks, keep_key, x.dtype, memory,
+                cache=ctx.plan_cache(),
+            )
+        backend = decision.backend
+        plan = plan if plan is not None else decision.plan
+        block = block if block is not None else decision.block
+    check_backend(backend)
+    if backend == "einsum" or (backend == "pallas" and n < 3):
+        out = _multi_ttm_einsum(x, matrices, keep)
+        return out.astype(out_dtype) if out_dtype is not None else out
+    if backend == "blocked_host":
+        from ..core.blocked import multi_ttm_blocked
+
+        if block is None:
+            from ..core.bounds import multi_ttm_best_block_size
+
+            mem = memory or Memory.abstract(2 ** 20)
+            # the oracle's convention is kept-mode-first (N dims, N-1
+            # contracted ranks); for the full core the lead mode plays
+            # the kept role, matching the pallas path's kernel_ranks
+            b_ranks = ranks[1:] if keep is None else ranks
+            block = multi_ttm_best_block_size(
+                canon, b_ranks, mem.budget_words
+            )
+        out = multi_ttm_blocked(x, matrices, keep, block)
+        return out.astype(out_dtype) if out_dtype is not None else out
+    # pallas: canonicalize kept mode first (mode 0 for the full core),
+    # run the blocked Kronecker kernel, then restore the mode order
+    from ..kernels import ops as kernel_ops  # lazy: avoids import cycle
+
+    lead = 0 if keep is None else keep
+    perm = (lead,) + tuple(k for k in range(n) if k != lead)
+    xp = jnp.transpose(x, perm)
+    mats = [matrices[k] for k in perm[1:]]
+    if plan is None and memory is not None:
+        # the keep=None kernel contracts the trailing N-1 modes only (the
+        # lead mode is contracted by the final small matmul)
+        kernel_ranks = ranks[1:] if keep is None else ranks
+        plan = choose_multi_ttm_blocks(
+            canon, kernel_ranks, x.dtype.itemsize, memory=memory
+        )
+    _count_pallas()
+    out2d = kernel_ops.multi_ttm_canonical_pallas(
+        xp, mats, plan=plan, interpret=interpret
+    )
+    rest_ranks = tuple(m.shape[1] for m in mats)
+    if keep is None:
+        # contract the lead mode too: one small matmul A_0^T @ Z
+        out2d = jax.lax.dot_general(
+            matrices[0].astype(out2d.dtype), out2d,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+        )
+        out = out2d.reshape((matrices[0].shape[1],) + rest_ranks)
+        out = out.astype(x.dtype)
+        return out.astype(out_dtype) if out_dtype is not None else out
+    out = out2d.reshape((x.shape[keep],) + rest_ranks)
+    inv = [0] * n
+    for pos, axis in enumerate(perm):
+        inv[axis] = pos
+    out = jnp.transpose(out, inv).astype(x.dtype)
     return out.astype(out_dtype) if out_dtype is not None else out

@@ -18,6 +18,14 @@ Everything the paper derives about *how to block* lives here:
     paper's exact uniform-b selection (Eq 9), re-exported for the simulator
     so block selection has a single import path.
 
+  * :class:`MultiTTMPlan` / :func:`choose_multi_ttm_blocks` /
+    :func:`uniform_multi_ttm_plan` — the Multi-TTM (Tucker/HOSVD,
+    arXiv:2207.10437) counterparts: kept-mode + contraction blocks with
+    the small per-mode Tucker ranks structural (never tiled), the
+    Kronecker weight block in the Eq-9-analog working set, and the
+    Eq-10-analog traffic model pinned against
+    ``core.bounds.multi_ttm_blocked_cost``.
+
 Formula provenance stays in :mod:`repro.core.bounds` (the pure equation
 library); this module is the only place that turns those equations into
 decisions.
@@ -260,6 +268,196 @@ def choose_blocks(
             break  # all-1 blocks; nothing fits this memory
         dims[j] //= 2
         plan = BlockPlan(dims[0], tuple(dims[1:-1]), dims[-1], x_has_rank)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Multi-TTM planning (the Tucker/HOSVD kernel, arXiv:2207.10437)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MultiTTMPlan:
+    """Block sizes for one canonical Multi-TTM contraction: kept mode first
+    (``block_i`` rows), contracted tensor modes next (``block_contract``),
+    each contracted mode paired with its small Tucker rank ``ranks[d]``.
+
+    Unlike :class:`BlockPlan` there is no rank tile: the R_d are the
+    *small* dimensions of the problem (Tucker ranks), so every tile keeps
+    them whole and the Kronecker weight block
+    ``W[(c_1..c_k), (r_1..r_k)] = prod_d A_d(c_d, r_d)`` is built in fast
+    memory, never materialized in HBM — the Multi-TTM analog of the
+    MTTKRP kernels' Khatri-Rao weight.
+    """
+
+    block_i: int
+    block_contract: tuple[int, ...]
+    ranks: tuple[int, ...]
+
+    # -- Eq 9 analog: working set -----------------------------------------
+    def working_set_words(self) -> int:
+        """Fast-memory words per grid step: tensor tile + matrix tiles +
+        Kronecker weight block + output tile (the Multi-TTM Eq-9 analog;
+        uniform-b form in ``core.bounds.multi_ttm_blocked_feasible_b``)."""
+        prod_c = math.prod(self.block_contract)
+        prod_r = math.prod(self.ranks)
+        x_tile = self.block_i * prod_c
+        m_tiles = sum(c * r for c, r in zip(self.block_contract, self.ranks))
+        kron = prod_c * prod_r
+        out = self.block_i * prod_r
+        return x_tile + m_tiles + kron + out
+
+    def fits(self, memory: Memory) -> bool:
+        return self.working_set_words() * memory.itemsize <= memory.budget_bytes
+
+    # -- shapes ------------------------------------------------------------
+    def blocks_per_mode(self) -> tuple[int, ...]:
+        return (self.block_i,) + tuple(self.block_contract)
+
+    def padded_shape(self, shape: Sequence[int]) -> tuple[int, ...]:
+        blocks = self.blocks_per_mode()
+        return tuple(_round_up(s, b) for s, b in zip(shape, blocks))
+
+    def grid(self, shape: Sequence[int]) -> tuple[int, ...]:
+        """Pallas grid (i, c_1..c_k) for the padded problem (no rank axis:
+        the R_d stay whole per tile)."""
+        padded = self.padded_shape(shape)
+        return (padded[0] // self.block_i,) + tuple(
+            padded[1 + d] // self.block_contract[d]
+            for d in range(len(self.block_contract))
+        )
+
+    # -- Eq 10 analog: traffic --------------------------------------------
+    def model_words(self, shape: Sequence[int]) -> int:
+        """The blocked Multi-TTM cost generalized to per-mode block sizes:
+        one pass over the tensor plus, per block, the matrix subblocks
+        (sum_d b_d R_d) and one load+store of the output subblock
+        (2 b_i prod R_d). With a uniform b this equals
+        ``core.bounds.multi_ttm_blocked_cost`` exactly."""
+        blocks = self.blocks_per_mode()
+        nblocks = math.prod(
+            math.ceil(s / b) for s, b in zip(shape, blocks)
+        )
+        per_block = sum(
+            b * r for b, r in zip(self.block_contract, self.ranks)
+        ) + 2 * self.block_i * math.prod(self.ranks)
+        return math.prod(shape) + nblocks * per_block
+
+    def traffic_model(self, shape: Sequence[int], itemsize: int = 4) -> dict:
+        """Modeled HBM<->VMEM traffic (bytes) of the Multi-TTM kernel,
+        mirroring its BlockSpec fetch rules: grid (i, c_1..c_k), c
+        innermost; the tensor is streamed once; matrix d is re-fetched
+        when c_d changes; the output tile is written once per i block
+        (output-stationary). ``model_bytes`` is the paper-ideal cost for
+        the same per-mode blocks (:meth:`model_words`)."""
+        n = len(shape)
+        padded = self.padded_shape(shape)
+        gi = padded[0] // self.block_i
+        gc = [
+            padded[1 + d] // self.block_contract[d] for d in range(n - 1)
+        ]
+        steps = gi * math.prod(gc)
+        x_bytes = steps * self.block_i * math.prod(self.block_contract) \
+            * itemsize
+        m_bytes = 0
+        run = gi
+        for d in range(n - 1):
+            run *= gc[d]
+            m_bytes += run * self.block_contract[d] * self.ranks[d] * itemsize
+        o_bytes = gi * self.block_i * math.prod(self.ranks) * itemsize
+        total = x_bytes + m_bytes + o_bytes
+        return {
+            "x_bytes": x_bytes,
+            "matrix_bytes": m_bytes,
+            "out_bytes": o_bytes,
+            "total_bytes": total,
+            "model_bytes": self.model_words(shape) * itemsize,
+            "steps": steps,
+            "working_set_bytes": self.working_set_words() * itemsize,
+        }
+
+
+def choose_multi_ttm_blocks(
+    shape: Sequence[int],
+    ranks: Sequence[int],
+    itemsize: int = 4,
+    *,
+    memory: Memory | None = None,
+) -> MultiTTMPlan:
+    """Pick blocks for a canonical Multi-TTM (kept mode first) against a
+    memory budget — the Multi-TTM counterpart of :func:`choose_blocks`.
+
+    The Tucker ranks are never tiled (they are the small dimensions); the
+    kept-mode and contraction blocks follow the same alignment-then-shrink
+    strategy as the MTTKRP planner, with the same degenerate-extent and
+    relax-below-budget guarantees."""
+    if memory is None:
+        memory = Memory.tpu_vmem(itemsize=itemsize)
+    lane, sublane = memory.lane, memory.sublane
+    n = len(shape)
+    ranks = tuple(int(r) for r in ranks)
+
+    def start(extent: int, unit: int, pref: int) -> int:
+        if extent <= unit:
+            return max(1, extent)
+        return min(_round_up(extent, unit), pref)
+
+    def floor(extent: int, unit: int) -> int:
+        return max(1, extent) if extent <= unit else unit
+
+    bi = start(shape[0], sublane, 128)
+    bc = []
+    for d in range(1, n):
+        if d == n - 1:
+            bc.append(start(shape[d], lane, 128))
+        else:
+            bc.append(start(shape[d], sublane, max(sublane, 8)))
+    fi = floor(shape[0], sublane)
+    fc = [
+        floor(shape[d], lane if d == n - 1 else sublane) for d in range(1, n)
+    ]
+    plan = MultiTTMPlan(bi, tuple(bc), ranks)
+    while not plan.fits(memory):
+        bi = plan.block_i
+        bc = list(plan.block_contract)
+        if bi > fi:
+            bi = max(fi, bi // 2)
+        else:
+            shrunk = False
+            for d in range(len(bc) - 1):
+                if bc[d] > fc[d]:
+                    bc[d] = max(fc[d], bc[d] // 2)
+                    shrunk = True
+                    break
+            if not shrunk:
+                if bc and bc[-1] > fc[-1]:
+                    bc[-1] = max(fc[-1], bc[-1] // 2)
+                else:
+                    break
+        plan = MultiTTMPlan(bi, tuple(bc), ranks)
+    while not plan.fits(memory):
+        dims = [plan.block_i, *plan.block_contract]
+        j = max(range(len(dims)), key=lambda k: dims[k])
+        if dims[j] <= 1:
+            break  # all-1 blocks: the ranks alone exceed this memory
+        dims[j] //= 2
+        plan = MultiTTMPlan(dims[0], tuple(dims[1:]), ranks)
+    return plan
+
+
+def uniform_multi_ttm_plan(
+    dims: Sequence[int], ranks: Sequence[int], memory: Memory | int
+) -> MultiTTMPlan:
+    """A :class:`MultiTTMPlan` with the paper's uniform b in every tensor
+    mode; ``plan.model_words(dims)`` then equals
+    ``core.bounds.multi_ttm_blocked_cost(dims, ranks, b)`` exactly."""
+    from ..core.bounds import multi_ttm_best_block_size, multi_ttm_blocked_cost
+
+    mem_words = memory.budget_words if isinstance(memory, Memory) else memory
+    b = multi_ttm_best_block_size(dims, ranks, mem_words)
+    plan = MultiTTMPlan(b, (b,) * (len(dims) - 1), tuple(int(r) for r in ranks))
+    assert int(plan.model_words(dims)) == int(
+        multi_ttm_blocked_cost(dims, ranks, b)
+    )
     return plan
 
 

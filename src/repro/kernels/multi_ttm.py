@@ -1,0 +1,135 @@
+"""Blocked Pallas Multi-TTM kernel (the Tucker/HOSVD workhorse).
+
+Computes the canonical kept-mode-first Multi-TTM
+
+    O(i, r_1..r_k) = sum_c X(i, c_1..c_k) * prod_d A_d(c_d, r_d)
+
+with the same output-stationary schedule as the MTTKRP kernels
+(:mod:`repro.kernels.mttkrpn`): grid (i, c_1..c_k) with the contraction
+tiles innermost, the output tile O(bi, prod R_d) VMEM-resident across the
+whole contraction sweep, the tensor streamed once, and the *Kronecker*
+weight block
+
+    W[(c_1..c_k), (r_1..r_k)] = prod_d A_d(c_d, r_d)
+
+built in VMEM by chained outer products — the rank-structured analog of
+the MTTKRP kernels' Khatri-Rao weight (separate small rank axes here,
+one shared rank axis there), never materialized in HBM.  The Tucker
+ranks are kept whole per tile (they are the small dimensions of the
+problem); only the tensor modes are blocked, planned by
+:class:`repro.engine.plan.MultiTTMPlan`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _compiler_params(n_contract: int):
+        sem = ("parallel",) + ("arbitrary",) * n_contract
+        if hasattr(pltpu, "CompilerParams"):
+            return pltpu.CompilerParams(dimension_semantics=sem)
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)  # pragma: no cover
+except Exception:  # pragma: no cover
+    def _compiler_params(n_contract: int):
+        return None
+
+
+def _kernel(*refs, n_contract: int, acc_dtype):
+    x_ref = refs[0]
+    m_refs = refs[1 : 1 + n_contract]
+    o_ref = refs[1 + n_contract]
+
+    first_contract_step = pl.program_id(1) == 0
+    for d in range(1, n_contract):
+        first_contract_step &= pl.program_id(1 + d) == 0
+
+    @pl.when(first_contract_step)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # chained Kronecker product over the contraction tiles:
+    # w rows follow the C-order flattening of (c_1..c_k), columns the
+    # C-order flattening of (r_1..r_k) — both match the x/out reshapes
+    w = m_refs[0][...].astype(acc_dtype)  # (b1, R1)
+    for f in m_refs[1:]:
+        ft = f[...].astype(acc_dtype)  # (bd, Rd)
+        pc, pr = w.shape
+        w = (w[:, None, :, None] * ft[None, :, None, :]).reshape(
+            pc * ft.shape[0], pr * ft.shape[1]
+        )
+    bi = x_ref.shape[0]
+    xm = x_ref[...].reshape(bi, -1)
+    o_ref[...] += jax.lax.dot_general(
+        xm, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+
+
+def multi_ttm_keep_pallas(
+    x: jax.Array,
+    matrices: Sequence[jax.Array],
+    *,
+    block_i: int,
+    block_contract: Sequence[int],
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Canonical kept-mode-first Multi-TTM: ``x`` is ``(I, C_1..C_k)``,
+    ``matrices`` are the k contracted-mode matrices ``(C_d, R_d)``.
+    Pre-padded tensor-mode extents required (the R_d are never padded);
+    returns the flattened ``(I, prod R_d)`` in ``acc_dtype``."""
+    nc = x.ndim - 1
+    assert len(matrices) == nc and len(block_contract) == nc
+    i_sz = x.shape[0]
+    ranks = tuple(m.shape[1] for m in matrices)
+    for d, m in enumerate(matrices):
+        assert m.shape[0] == x.shape[1 + d]
+        assert x.shape[1 + d] % block_contract[d] == 0
+    assert i_sz % block_i == 0
+    prod_r = 1
+    for r in ranks:
+        prod_r *= r
+
+    grid = (i_sz // block_i,) + tuple(
+        x.shape[1 + d] // block_contract[d] for d in range(nc)
+    )
+
+    def x_map(i, *cs):
+        return (i,) + cs
+
+    def m_map_for(d):
+        def m_map(i, *cs):
+            return (cs[d], 0)
+        return m_map
+
+    def o_map(i, *cs):
+        return (i, 0)
+
+    in_specs = [
+        pl.BlockSpec((block_i,) + tuple(block_contract), x_map)
+    ] + [
+        pl.BlockSpec((block_contract[d], ranks[d]), m_map_for(d))
+        for d in range(nc)
+    ]
+    kernel = functools.partial(_kernel, n_contract=nc, acc_dtype=acc_dtype)
+    kwargs = {}
+    cp = _compiler_params(nc)
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_i, prod_r), o_map),
+        out_shape=jax.ShapeDtypeStruct((i_sz, prod_r), acc_dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, *matrices)

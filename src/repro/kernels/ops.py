@@ -26,11 +26,14 @@ from ..engine.plan import (  # noqa: F401  (re-exported planner API)
     VMEM_BUDGET,
     VMEM_BYTES,
     BlockPlan,
+    MultiTTMPlan,
     choose_blocks,
+    choose_multi_ttm_blocks,
     mttkrp_traffic_model,
 )
 from .mttkrp3 import mttkrp3_pallas
 from .mttkrpn import mttkrp_partial_pallas, mttkrpn_pallas
+from .multi_ttm import multi_ttm_keep_pallas
 
 
 def _round_up(x: int, m: int) -> int:
@@ -166,6 +169,45 @@ def mttkrp_partial_canonical_pallas(
         interpret=interpret,
     )
     out = out[:out_rows, :rank]
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def multi_ttm_canonical_pallas(
+    xp: jax.Array,
+    mats: Sequence[jax.Array],
+    *,
+    plan: MultiTTMPlan | None = None,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Kept-mode-first Multi-TTM through the blocked Kronecker kernel.
+
+    ``xp`` is the (already transposed) tensor with the kept mode at axis
+    0; ``mats`` are the k contracted-mode matrices ``(C_d, R_d)`` for
+    axes 1..k in order. Pads the tensor modes to the plan's block
+    multiples (zero padding contributes nothing; padded output rows are
+    sliced away — the R_d are never padded), runs
+    :func:`repro.kernels.multi_ttm.multi_ttm_keep_pallas`, and un-pads.
+    Returns the flattened ``(I, prod R_d)`` result.
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    ranks = tuple(m.shape[1] for m in mats)
+    out_rows = xp.shape[0]
+    if plan is None:
+        plan = choose_multi_ttm_blocks(xp.shape, ranks, xp.dtype.itemsize)
+    tgt = plan.padded_shape(xp.shape)
+    xp = jnp.pad(xp, [(0, t - s) for t, s in zip(tgt, xp.shape)])
+    mats = [
+        jnp.pad(m, ((0, tgt[1 + d] - m.shape[0]), (0, 0)))
+        for d, m in enumerate(mats)
+    ]
+    out = multi_ttm_keep_pallas(
+        xp, mats,
+        block_i=plan.block_i,
+        block_contract=plan.block_contract,
+        interpret=interpret,
+    )
+    out = out[:out_rows]
     return out.astype(out_dtype) if out_dtype is not None else out
 
 

@@ -42,7 +42,9 @@ from .search import (  # NB: the search *function* stays module-qualified
     TuneResult,
     generate_candidates,
     resolve,
+    resolve_multi_ttm,
     tune_mttkrp,
+    tune_multi_ttm,
     tune_partial,
 )
 from . import cache, calibrate, search  # noqa: F401  (submodule access)
@@ -64,7 +66,9 @@ __all__ = [
     "TuneResult",
     "generate_candidates",
     "resolve",
+    "resolve_multi_ttm",
     "tune_mttkrp",
+    "tune_multi_ttm",
     "tune_partial",
     "search",  # the submodule (repro.tune.search)
 ]

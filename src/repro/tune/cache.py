@@ -39,7 +39,7 @@ from typing import Iterator, Sequence
 
 import jax
 
-from ..engine.plan import BlockPlan, Memory
+from ..engine.plan import BlockPlan, Memory, MultiTTMPlan
 
 SCHEMA_VERSION = 1
 ENV_CACHE_PATH = "REPRO_TUNE_CACHE"
@@ -59,7 +59,13 @@ def resolve_cache_path(path: str | None = None) -> str:
 # BlockPlan (de)serialization — exact round-trip
 # ---------------------------------------------------------------------------
 
-def plan_to_dict(plan: BlockPlan) -> dict:
+def plan_to_dict(plan: BlockPlan | MultiTTMPlan) -> dict:
+    if isinstance(plan, MultiTTMPlan):
+        return {
+            "block_i": plan.block_i,
+            "block_contract": list(plan.block_contract),
+            "ranks": list(plan.ranks),
+        }
     return {
         "block_i": plan.block_i,
         "block_contract": list(plan.block_contract),
@@ -68,7 +74,13 @@ def plan_to_dict(plan: BlockPlan) -> dict:
     }
 
 
-def plan_from_dict(d: dict) -> BlockPlan:
+def plan_from_dict(d: dict) -> BlockPlan | MultiTTMPlan:
+    if "ranks" in d:  # Multi-TTM plans carry the per-mode Tucker ranks
+        return MultiTTMPlan(
+            block_i=int(d["block_i"]),
+            block_contract=tuple(int(c) for c in d["block_contract"]),
+            ranks=tuple(int(r) for r in d["ranks"]),
+        )
     return BlockPlan(
         block_i=int(d["block_i"]),
         block_contract=tuple(int(c) for c in d["block_contract"]),
@@ -86,17 +98,25 @@ def memory_tag(memory: Memory) -> str:
 
 def cache_key(
     shape: Sequence[int],
-    rank: int,
+    rank: int | Sequence[int],
     mode: int,
     dtype,
     memory: Memory,
     *,
     kind: str = "mttkrp",
 ) -> str:
-    """The tuning-problem identity; every field that changes the answer."""
+    """The tuning-problem identity; every field that changes the answer.
+
+    ``rank`` is the CP rank (int) or — for ``kind="multi_ttm"`` — the
+    tuple of per-mode Tucker ranks (tagged ``r1xr2x...``); ``mode`` is
+    the output/kept mode (``-1`` = full Tucker core, no kept mode)."""
     shape_tag = "x".join(str(int(s)) for s in shape)
+    if isinstance(rank, (tuple, list)):
+        rank_tag = "x".join(str(int(r)) for r in rank)
+    else:
+        rank_tag = str(int(rank))
     return (
-        f"{kind}|shape={shape_tag}|rank={int(rank)}|mode={int(mode)}"
+        f"{kind}|shape={shape_tag}|rank={rank_tag}|mode={int(mode)}"
         f"|dtype={jax.numpy.dtype(dtype).name}|mem={memory_tag(memory)}"
         f"|platform={jax.default_backend()}|jax={jax.__version__}"
     )

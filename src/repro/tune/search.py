@@ -41,7 +41,14 @@ import jax
 import jax.numpy as jnp
 
 from ..engine.context import ExecutionContext
-from ..engine.plan import BlockPlan, Memory, choose_blocks, uniform_plan
+from ..engine.plan import (
+    BlockPlan,
+    Memory,
+    MultiTTMPlan,
+    choose_blocks,
+    choose_multi_ttm_blocks,
+    uniform_plan,
+)
 from .cache import CacheEntry, PlanCache, cache_key, default_cache, plan_to_dict
 
 KERNEL_VARIANTS = ("specialized", "generic")
@@ -611,6 +618,182 @@ def tune_partial(
 
 
 # ---------------------------------------------------------------------------
+# Multi-TTM (kind="multi_ttm" cache entries; engine.execute.multi_ttm)
+# ---------------------------------------------------------------------------
+
+def _multi_ttm_plan_candidates(
+    canon_shape: Sequence[int],
+    kernel_ranks: Sequence[int],
+    memory: Memory,
+    itemsize: int = 4,
+    *,
+    max_plans: int = 8,
+) -> list[MultiTTMPlan]:
+    """Analytic plan + halved/doubled per-axis perturbations (Eq-9-feasible
+    only) — the Multi-TTM counterpart of :func:`candidate_plans` (the
+    Tucker ranks are structural, never perturbed)."""
+    base = choose_multi_ttm_blocks(
+        canon_shape, kernel_ranks, itemsize, memory=memory
+    )
+    plans = [base]
+    axes = 1 + len(base.block_contract)
+    for axis in range(axes):
+        for num, den in ((1, 2), (2, 1)):
+            bi = base.block_i
+            bc = list(base.block_contract)
+            if axis == 0:
+                bi = max(1, bi * num // den)
+            else:
+                bc[axis - 1] = max(1, bc[axis - 1] * num // den)
+            cand = MultiTTMPlan(bi, tuple(bc), base.ranks)
+            if cand.fits(memory):
+                plans.append(cand)
+    seen: set[tuple] = set()
+    unique: list[MultiTTMPlan] = []
+    for p in plans:
+        sig = (p.block_i, p.block_contract)
+        if sig not in seen:
+            seen.add(sig)
+            unique.append(p)
+    return unique[:max_plans]
+
+
+def tune_multi_ttm(
+    x: jax.Array,
+    matrices: Sequence[jax.Array],
+    keep: int | None,
+    *,
+    ctx: ExecutionContext | None = None,
+    memory: Memory | None = None,
+    cache: PlanCache | None = None,
+    metric: str = "auto",
+    interpret: bool | None = None,
+    force: bool = False,
+    persist: bool = True,
+    warmup: int = 1,
+    reps: int = 3,
+    max_plans: int = 8,
+) -> TuneResult:
+    """Search + persist the winner for one Multi-TTM problem
+    (``kind="multi_ttm"`` cache entries — what ``multi_ttm`` with
+    ``backend="auto"`` resolves against).
+
+    Candidates: einsum, the uniform-b blocked_host schedule, and the
+    blocked Kronecker kernel with the analytic plan and its
+    perturbations. Same metric semantics as :func:`search`; idempotent
+    like :func:`tune_mttkrp`.
+    """
+    from ..engine import execute as engine_execute  # call-time: layer cycle
+    from ..core.bounds import multi_ttm_best_block_size
+
+    if ctx is not None:
+        memory = memory if memory is not None else ctx.memory
+        interpret = interpret if interpret is not None else ctx.interpret
+        cache = cache if cache is not None else ctx.plan_cache()
+    metric = _resolve_metric(metric)
+    cache = cache or default_cache()
+    mem = memory or Memory.tpu_vmem(itemsize=x.dtype.itemsize)
+    keep_key = -1 if keep is None else keep
+    lead = 0 if keep is None else keep
+    canon = (x.shape[lead],) + tuple(
+        s for k, s in enumerate(x.shape) if k != lead
+    )
+    ranks = tuple(
+        m.shape[1] for k, m in enumerate(matrices) if k != keep
+    )
+    kernel_ranks = ranks[1:] if keep is None else ranks
+    key = cache_key(canon, ranks, keep_key, x.dtype, mem, kind="multi_ttm")
+    if not force:
+        entry = cache.get(key)
+        if entry is not None:
+            winner = Candidate(
+                entry.backend, plan=entry.to_plan(), block=entry.block
+            )
+            best = Measurement(
+                winner, walltime_us=entry.walltime_us,
+                modeled_bytes=entry.modeled_bytes, score=entry.score,
+            )
+            return TuneResult(
+                key, winner, [best], entry.metric, cache_hit=True
+            )
+
+    cands = [Candidate("einsum")]
+    # kept-mode-first oracle convention: N dims pair with N-1 contracted
+    # ranks (the lead mode plays the kept role for the full core)
+    abstract_b = multi_ttm_best_block_size(
+        canon, kernel_ranks, Memory.abstract(mem.budget_words).budget_words
+    )
+    cands.append(Candidate("blocked_host", block=abstract_b))
+    if len(canon) >= 3:
+        cands += [
+            Candidate("pallas", plan=p)
+            for p in _multi_ttm_plan_candidates(
+                canon, kernel_ranks, mem, x.dtype.itemsize,
+                max_plans=max_plans,
+            )
+        ]
+
+    def tm_bytes(c):
+        return int(
+            c.plan.traffic_model(canon, x.dtype.itemsize)["total_bytes"]
+        )
+
+    timed, modeled_only = _split_for_metric(cands, metric, tm_bytes)
+
+    reference = engine_execute.multi_ttm(
+        x, matrices, keep,
+        ctx=ExecutionContext.create(backend="einsum"),
+    )
+    jax.block_until_ready(reference)
+
+    def call_for(c):
+        c_ctx = ExecutionContext.create(
+            backend=c.backend, interpret=interpret
+        )
+
+        def call():
+            return engine_execute.multi_ttm(
+                x, matrices, keep, ctx=c_ctx, plan=c.plan, block=c.block
+            )
+
+        return call
+
+    measurements = [
+        _measure_one(
+            c, call_for(c), reference=reference, warmup=warmup, reps=reps,
+            modeled_bytes=tm_bytes(c) if c.plan is not None else None,
+        )
+        for c in timed
+    ]
+    measurements += [
+        Measurement(c, modeled_bytes=tm_bytes(c)) for c in modeled_only
+    ]
+    ok = [m for m in measurements if m.ok and math.isfinite(m.walltime_us)]
+    if not ok:
+        raise RuntimeError(f"no candidate survived measurement for {key}")
+    _assign_scores(measurements, metric)
+    winner = min(ok, key=lambda m: m.walltime_us)
+    cache.put(
+        key,
+        CacheEntry(
+            backend=winner.candidate.backend,
+            plan=(
+                plan_to_dict(winner.candidate.plan)
+                if winner.candidate.plan is not None else None
+            ),
+            block=winner.candidate.block,
+            metric=metric,
+            score=winner.score,
+            walltime_us=winner.walltime_us,
+            modeled_bytes=winner.modeled_bytes,
+            meta={"candidates": len(measurements)},
+        ),
+        persist=persist,
+    )
+    return TuneResult(key, winner.candidate, measurements, metric)
+
+
+# ---------------------------------------------------------------------------
 # backend="auto" resolution (cache hit -> tuned; miss -> model-best)
 # ---------------------------------------------------------------------------
 
@@ -656,6 +839,45 @@ def resolve(
     if jax.default_backend() == "tpu" and len(shape) >= 3:
         plan = choose_blocks(
             shape, rank, itemsize, memory=mem, x_has_rank=x_has_rank
+        )
+        return Resolved("pallas", plan, None, None, False, key)
+    return Resolved("einsum", None, None, None, False, key)
+
+
+def resolve_multi_ttm(
+    canon_shape: Sequence[int],
+    ranks: Sequence[int],
+    keep_key: int,
+    dtype,
+    memory: Memory | None = None,
+    *,
+    cache: PlanCache | None = None,
+) -> Resolved:
+    """``backend="auto"`` resolution for one Multi-TTM problem
+    (``kind="multi_ttm"``): cache hit → the tuned configuration exactly;
+    miss → pallas + the analytic :func:`choose_multi_ttm_blocks` plan on
+    TPU, einsum on hosts.  ``canon_shape`` is kept-mode-first;
+    ``ranks`` are *all* contracted ranks (the problem identity);
+    ``keep_key`` is the kept mode, or ``-1`` for the full core (whose
+    kernel contracts the trailing modes only, so its plan uses
+    ``ranks[1:]``).  Pure Python over static shapes — trace-safe.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    mem = memory or Memory.tpu_vmem(itemsize=itemsize)
+    key = cache_key(
+        canon_shape, tuple(ranks), keep_key, dtype, mem, kind="multi_ttm"
+    )
+    cache = cache or default_cache()
+    entry = cache.get(key)
+    if entry is not None:
+        return Resolved(
+            entry.backend, entry.to_plan(), entry.variant, entry.block,
+            True, key,
+        )
+    if jax.default_backend() == "tpu" and len(canon_shape) >= 3:
+        kernel_ranks = tuple(ranks)[1:] if keep_key == -1 else tuple(ranks)
+        plan = choose_multi_ttm_blocks(
+            canon_shape, kernel_ranks, itemsize, memory=mem
         )
         return Resolved("pallas", plan, None, None, False, key)
     return Resolved("einsum", None, None, None, False, key)

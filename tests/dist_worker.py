@@ -411,6 +411,148 @@ def check_context_roundtrip_reproduces_sweep():
     print("PASS context_roundtrip_reproduces_sweep")
 
 
+def check_multi_ttm_comm_matches_model():
+    """Measured ring bytes of the stationary full-core Multi-TTM ==
+    par_multi_ttm_cost, exactly (the Eq-12 analog for Tucker)."""
+    from repro.core.bounds import par_multi_ttm_cost
+    from repro.distributed.tucker_parallel import (
+        multi_ttm_stationary,
+        place_multi_ttm_inputs,
+    )
+    from repro.engine.execute import multi_ttm
+
+    dims, ranks = (16, 16, 16), (4, 3, 2)
+    x = random_tensor(jax.random.PRNGKey(50), dims)
+    mats = [
+        jax.random.normal(jax.random.PRNGKey(51 + k), (d, r))
+        for k, (d, r) in enumerate(zip(dims, ranks))
+    ]
+    for grid in ((2, 2, 2), (1, 2, 4)):
+        mesh = make_grid_mesh(grid)
+        f = multi_ttm_stationary(mesh, 3)
+        xs, ms = place_multi_ttm_inputs(mesh, x, mats)
+        np.testing.assert_allclose(
+            np.asarray(f(xs, *ms)), np.asarray(multi_ttm(x, mats, None)),
+            rtol=1e-4, atol=1e-4,
+        )
+        measured = parse_collectives(
+            f.lower(xs, *ms).compile().as_text()
+        ).ring_bytes
+        predicted = int(par_multi_ttm_cost(dims, ranks, grid) * 4)
+        assert measured == predicted, (grid, measured, predicted)
+    print("PASS multi_ttm_comm_matches_model")
+
+
+def check_tucker_sweep_comm_matches_model():
+    """HLO-measured bytes of ONE distributed HOOI sweep == the Multi-TTM
+    sweep model (multi_ttm_sweep_words) exactly — per mode, one
+    hyperslice all-reduce + one fiber all-gather of the partial Y^(k),
+    and no factor collectives at all."""
+    import math
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.tensor import frob_norm
+    from repro.core.tucker import hosvd_init
+    from repro.distributed.grid_select import multi_ttm_sweep_words
+    from repro.distributed.tucker_parallel import (
+        build_tucker_sweep,
+        place_tucker_state,
+    )
+
+    dims, ranks = (16, 16, 16), (4, 3, 2)
+    x = random_tensor(jax.random.PRNGKey(52), dims)
+    factors = hosvd_init(x, ranks)
+    for grid in ((2, 2, 2), (1, 2, 4)):
+        mesh = make_grid_mesh(grid)
+        sweep = build_tucker_sweep(mesh, 3, ranks)
+        xs, fs = place_tucker_state(mesh, x, factors)
+        normx = jax.device_put(frob_norm(x), NamedSharding(mesh, P()))
+        summ = parse_collectives(
+            sweep.lower(xs, fs, normx).compile().as_text()
+        )
+        measured = summ.ring_bytes
+        procs = math.prod(grid)
+        # exact expected bytes, truncating per op like CollectiveOp
+        expected = 0
+        for k, (d, pk) in enumerate(zip(dims, grid)):
+            rbar = math.prod(r for j, r in enumerate(ranks) if j != k)
+            w_bytes = (d // pk) * rbar * 4
+            q = procs // pk
+            expected += int(2 * (q - 1) / q * w_bytes) + (pk - 1) * w_bytes
+        assert measured == expected, (grid, measured, expected)
+        # ... which is exactly the grid-selection objective in words
+        assert expected == int(multi_ttm_sweep_words(dims, ranks, grid) * 4)
+        # factors never travel: every gather/reduce operand is Y^(k)-sized
+        for op in summ.ops:
+            assert op.operand_bytes <= max(
+                (d // pk) * math.prod(
+                    r for j, r in enumerate(ranks) if j != k
+                ) * 4
+                for k, (d, pk) in enumerate(zip(dims, grid))
+            ), (op.kind, op.operand_bytes)
+    print("PASS tucker_sweep_comm_matches_model")
+
+
+def check_tucker_parallel_matches_sequential():
+    """The distributed HOOI sweep is numerically the sequential driver:
+    same fits, same factors (deterministic eigh sign convention), same
+    core, to fp32 collective-reordering tolerance — and the core-driver
+    entry (tucker_hooi with a distributed context) selects the
+    Multi-TTM-sweep-optimal grid automatically."""
+    from repro.core.tensor import random_tucker_tensor
+    from repro.core.tucker import tucker_hooi
+    from repro.distributed.grid_select import choose_tucker_grid
+    from repro.distributed.tucker_parallel import tucker_hooi_parallel
+    from repro.engine.context import ExecutionContext
+
+    dims, ranks = (16, 16, 16), (4, 3, 2)
+    x, _, _ = random_tucker_tensor(jax.random.PRNGKey(53), dims, ranks)
+    seq = tucker_hooi(x, ranks, n_iters=5)
+    par = tucker_hooi_parallel(x, ranks, n_iters=5, grid=(2, 2, 2))
+    for fs_, fp in zip(seq.fits, par.fits):
+        assert abs(fs_ - fp) < 1e-3, (seq.fits, par.fits)
+    for k in range(3):
+        np.testing.assert_allclose(
+            np.asarray(par.factors[k]), np.asarray(seq.factors[k]),
+            rtol=1e-3, atol=1e-3,
+        )
+    np.testing.assert_allclose(
+        np.asarray(par.core), np.asarray(seq.core), rtol=1e-3, atol=1e-3
+    )
+    assert par.final_fit > 0.999, par.fits
+    # the unified driver entry: a distributed context routes here with
+    # automatic grid selection
+    choice = choose_tucker_grid(dims, ranks, len(jax.devices()))
+    assert choice.procs == 8, choice
+    ctx = ExecutionContext.create(distributed=True)
+    res = tucker_hooi(x, ranks, n_iters=5, ctx=ctx)
+    assert res.final_fit > 0.999, res.fits
+    print("PASS tucker_parallel_matches_sequential")
+
+
+def check_tucker_sweep_pallas_local():
+    """Sweep driver with the engine's Pallas Kronecker kernel for every
+    per-shard local Multi-TTM: numerics match the einsum-local sweep."""
+    from repro.core.tensor import random_tucker_tensor
+    from repro.distributed.tucker_parallel import tucker_hooi_parallel
+    from repro.engine.context import ExecutionContext
+    from repro.engine.execute import pallas_dispatch_count
+
+    dims, ranks = (16, 16, 24), (4, 3, 2)
+    x, _, _ = random_tucker_tensor(jax.random.PRNGKey(54), dims, ranks)
+    ctx = ExecutionContext.create(
+        backend="pallas", interpret=True, distributed=True, grid=(2, 2, 2)
+    )
+    before = pallas_dispatch_count()
+    par = tucker_hooi_parallel(x, ranks, n_iters=4, ctx=ctx)
+    assert pallas_dispatch_count() > before
+    ref = tucker_hooi_parallel(x, ranks, n_iters=4, grid=(2, 2, 2))
+    for fp, fr in zip(par.fits, ref.fits):
+        assert abs(fp - fr) < 1e-3, (par.fits, ref.fits)
+    print("PASS tucker_sweep_pallas_local")
+
+
 CHECKS = [
     check_alg3_numerics,
     check_alg3_asymmetric_grid,
@@ -427,6 +569,10 @@ CHECKS = [
     check_cp_auto_grid_driver,
     check_cp_sweep_pallas_local,
     check_context_roundtrip_reproduces_sweep,
+    check_multi_ttm_comm_matches_model,
+    check_tucker_sweep_comm_matches_model,
+    check_tucker_parallel_matches_sequential,
+    check_tucker_sweep_pallas_local,
 ]
 
 if __name__ == "__main__":

@@ -19,12 +19,17 @@ DOCUMENTED_SURFACE = [
     "Distribution",
     "Memory",
     "BlockPlan",
+    "MultiTTMPlan",
     "mttkrp",
     "contract_partial",
+    "multi_ttm",
     "cp_als",
     "cp_gradient",
     "CPResult",
+    "tucker_hooi",
+    "TuckerResult",
     "select_grid",
+    "select_tucker_grid",
 ]
 
 
@@ -65,6 +70,43 @@ def test_every_exported_callable_has_docstring():
 def test_package_has_version_and_module_doc():
     assert repro.__doc__ and "ExecutionContext" in repro.__doc__
     assert isinstance(repro.__version__, str) and repro.__version__
+
+
+def test_multi_ttm_surface_is_documented():
+    """Docstring-presence audit over the full new Multi-TTM/Tucker
+    surface, one level below the frozen top-level exports."""
+    from repro.core import bounds, tucker
+    from repro.distributed import grid_select, tucker_parallel
+    from repro.engine import execute, plan
+    from repro.kernels import multi_ttm as multi_ttm_kernel
+    from repro.tune import search
+
+    audited = [
+        execute.multi_ttm,
+        plan.MultiTTMPlan,
+        plan.choose_multi_ttm_blocks,
+        plan.uniform_multi_ttm_plan,
+        tucker.tucker_hooi,
+        tucker.hosvd_init,
+        tucker.ttm,
+        tucker.TuckerResult,
+        bounds.multi_ttm_seq_lb,
+        bounds.multi_ttm_blocked_cost,
+        bounds.par_multi_ttm_cost,
+        grid_select.select_tucker_grid,
+        grid_select.choose_tucker_grid,
+        grid_select.multi_ttm_sweep_words,
+        tucker_parallel.multi_ttm_stationary,
+        tucker_parallel.build_tucker_sweep,
+        tucker_parallel.tucker_hooi_parallel,
+        multi_ttm_kernel.multi_ttm_keep_pallas,
+        search.tune_multi_ttm,
+        search.resolve_multi_ttm,
+    ]
+    for obj in audited:
+        assert obj.__doc__ and len(obj.__doc__.strip()) > 20, (
+            f"{obj.__module__}.{obj.__qualname__} is under-documented"
+        )
 
 
 # ---------------------------------------------------------------------------

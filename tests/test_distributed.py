@@ -61,6 +61,10 @@ def dist_transcript():
         "cp_auto_grid_driver",
         "cp_sweep_pallas_local",
         "context_roundtrip_reproduces_sweep",
+        "multi_ttm_comm_matches_model",
+        "tucker_sweep_comm_matches_model",
+        "tucker_parallel_matches_sequential",
+        "tucker_sweep_pallas_local",
     ],
 )
 def test_distributed_check(dist_transcript, name):

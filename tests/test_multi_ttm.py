@@ -1,0 +1,392 @@
+"""Multi-TTM on the unified engine (arXiv:2207.10437): backends vs the
+einsum oracle, the planner's bounds pins, the Tucker/HOOI driver, the
+tune-cache ``kind="multi_ttm"`` path, and grid selection vs brute force.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import bounds
+from repro.core.tensor import random_tucker_tensor
+from repro.core.tucker import hosvd_init, ttm, tucker_hooi
+from repro.distributed.grid_select import (
+    brute_force_tucker,
+    choose_tucker_grid,
+    multi_ttm_sweep_words,
+    select_tucker_grid,
+)
+from repro.engine.plan import (
+    Memory,
+    MultiTTMPlan,
+    choose_multi_ttm_blocks,
+    uniform_multi_ttm_plan,
+)
+from repro.tune.cache import isolated_cache
+from repro.tune.search import resolve_multi_ttm, tune_multi_ttm
+
+DIMS3, RANKS3 = (12, 10, 8), (4, 3, 2)
+DIMS4, RANKS4 = (6, 5, 4, 7), (2, 3, 2, 3)
+
+
+def _problem(dims, ranks, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), dims)
+    mats = [
+        jax.random.normal(jax.random.PRNGKey(seed + 1 + k), (d, r))
+        for k, (d, r) in enumerate(zip(dims, ranks))
+    ]
+    return x, mats
+
+
+def _oracle(x, mats, keep):
+    """Direct per-mode tensordot chain (independent of the engine)."""
+    out = x
+    for k in range(x.ndim):
+        if k == keep:
+            continue
+        out = ttm(out, mats[k], k)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# all backends match the oracle (3- and 4-way, every kept mode + core)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims,ranks", [(DIMS3, RANKS3), (DIMS4, RANKS4)])
+@pytest.mark.parametrize("backend", ["einsum", "blocked_host", "pallas"])
+def test_multi_ttm_matches_oracle_all_keeps(dims, ranks, backend):
+    x, mats = _problem(dims, ranks)
+    ctx = repro.ExecutionContext.create(backend=backend, interpret=True)
+    for keep in (None, *range(len(dims))):
+        ref = _oracle(x, mats, keep)
+        got = repro.multi_ttm(x, mats, keep, ctx=ctx)
+        assert got.shape == ref.shape
+        scale = float(jnp.max(jnp.abs(ref))) + 1e-30
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 1e-6 * max(scale, 1.0) * 50, (keep, err)
+
+
+def test_multi_ttm_output_mode_order():
+    x, mats = _problem(DIMS3, RANKS3)
+    assert repro.multi_ttm(x, mats, None).shape == RANKS3
+    assert repro.multi_ttm(x, mats, 1).shape == (RANKS3[0], DIMS3[1], RANKS3[2])
+
+
+def test_multi_ttm_kept_matrix_may_be_none():
+    x, mats = _problem(DIMS3, RANKS3)
+    ref = repro.multi_ttm(x, mats, 1)
+    got = repro.multi_ttm(x, [mats[0], None, mats[2]], 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref))
+
+
+def test_multi_ttm_validates_inputs():
+    x, mats = _problem(DIMS3, RANKS3)
+    with pytest.raises(ValueError, match="out of range"):
+        repro.multi_ttm(x, mats, 3)
+    with pytest.raises(ValueError, match="one matrix per tensor mode"):
+        repro.multi_ttm(x, mats[:2])
+    bad = [mats[0], jnp.zeros((DIMS3[1] + 1, 3)), mats[2]]
+    with pytest.raises(ValueError, match="rows"):
+        repro.multi_ttm(x, bad, None)
+    with pytest.raises(ValueError, match="unknown backend"):
+        repro.ExecutionContext.create(backend="nope")
+
+
+def test_multi_ttm_pallas_explicit_plan_and_memory():
+    x, mats = _problem(DIMS3, RANKS3)
+    ref = repro.multi_ttm(x, mats, 0)
+    plan = MultiTTMPlan(4, (5, 8), tuple(RANKS3[1:]))
+    ctx = repro.ExecutionContext.create(backend="pallas", interpret=True)
+    got = repro.multi_ttm(x, mats, 0, ctx=ctx, plan=plan)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+    mem_ctx = repro.ExecutionContext.create(
+        backend="pallas", interpret=True,
+        memory=Memory.abstract(2048, itemsize=4),
+    )
+    got2 = repro.multi_ttm(x, mats, 0, ctx=mem_ctx)
+    np.testing.assert_allclose(
+        np.asarray(got2), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# planner pins against the bounds oracle
+# ---------------------------------------------------------------------------
+
+def test_uniform_plan_model_equals_bounds_oracle():
+    for dims, ranks, mem in [
+        ((16, 12, 10), (3, 4), 4096),
+        ((32, 32, 32), (2, 2), 1024),
+        ((8, 8, 8, 8), (2, 3, 2), 4096),
+    ]:
+        plan = uniform_multi_ttm_plan(dims, ranks, mem)
+        b = plan.block_i
+        assert int(plan.model_words(dims)) == int(
+            bounds.multi_ttm_blocked_cost(dims, ranks, b)
+        )
+        assert bounds.multi_ttm_blocked_feasible_b(
+            len(dims), ranks, b, mem
+        )
+        assert not bounds.multi_ttm_blocked_feasible_b(
+            len(dims), ranks, b + 1, mem
+        ) or b == 1
+
+
+def test_working_set_matches_feasibility_oracle():
+    ranks = (3, 4)
+    for b in (1, 2, 4, 8):
+        plan = MultiTTMPlan(b, (b, b), ranks)
+        ws = plan.working_set_words()
+        # the uniform-b Eq-9 analog counts exactly the same words
+        assert bounds.multi_ttm_blocked_feasible_b(3, ranks, b, ws)
+        assert not bounds.multi_ttm_blocked_feasible_b(3, ranks, b, ws - 1)
+
+
+def test_choose_multi_ttm_blocks_fits_budget():
+    mem = Memory.abstract(4096)
+    plan = choose_multi_ttm_blocks((64, 48, 32), (4, 3), memory=mem)
+    assert plan.fits(mem)
+    assert plan.ranks == (4, 3)
+    # degenerate extents never over-padded
+    tiny = choose_multi_ttm_blocks((1, 4, 8), (2, 2), memory=mem)
+    assert tiny.block_i == 1 and tiny.padded_shape((1, 4, 8)) == (1, 4, 8)
+
+
+def test_traffic_model_consistency():
+    plan = choose_multi_ttm_blocks(
+        (32, 24, 16), (4, 3), memory=Memory.abstract(8192)
+    )
+    tm = plan.traffic_model((32, 24, 16))
+    assert tm["total_bytes"] == (
+        tm["x_bytes"] + tm["matrix_bytes"] + tm["out_bytes"]
+    )
+    assert tm["model_bytes"] == plan.model_words((32, 24, 16)) * 4
+    assert tm["working_set_bytes"] == plan.working_set_words() * 4
+
+
+def test_seq_lower_bounds_sane():
+    dims, ranks = (32, 32, 32), (4, 4, 4)
+    for mem in (256, 1024, 4096):
+        lb = bounds.multi_ttm_seq_lb(dims, ranks, mem)
+        assert lb >= 0
+        # an upper bound can never beat the lower bound
+        canon = dims  # kept-mode-first canonical: keep mode 0
+        b = bounds.multi_ttm_best_block_size(canon, ranks[1:], mem)
+        cost = bounds.multi_ttm_blocked_cost(canon, ranks[1:], b)
+        assert cost >= bounds.multi_ttm_seq_lb(canon, ranks[1:], mem)
+    # tighter memory => weaker-or-equal achievable cost, larger lb term
+    lb_small = bounds.multi_ttm_seq_lb_memory(dims, ranks, 256)
+    lb_big = bounds.multi_ttm_seq_lb_memory(dims, ranks, 4096)
+    assert lb_small >= lb_big
+
+
+def test_par_multi_ttm_cost_shrinks_with_grid():
+    dims, ranks = (32, 32, 32), (4, 3, 2)
+    c1 = bounds.par_multi_ttm_cost(dims, ranks, (1, 1, 1))
+    c8 = bounds.par_multi_ttm_cost(dims, ranks, (2, 2, 2))
+    assert c1 == 0.0  # one processor communicates nothing
+    assert c8 > 0
+
+
+# ---------------------------------------------------------------------------
+# Tucker/HOOI driver
+# ---------------------------------------------------------------------------
+
+def test_tucker_hooi_recovers_exact_multilinear_rank():
+    x, core, _ = random_tucker_tensor(
+        jax.random.PRNGKey(3), (14, 12, 10), (4, 3, 2)
+    )
+    res = tucker_hooi(x, (4, 3, 2), n_iters=6)
+    assert res.final_fit > 0.999, res.fits
+    assert res.core.shape == (4, 3, 2)
+    rec = res.reconstruct()
+    err = float(jnp.linalg.norm(rec - x) / jnp.linalg.norm(x))
+    assert err < 1e-3, err
+    # factors orthonormal
+    for f in res.factors:
+        np.testing.assert_allclose(
+            np.asarray(f.T @ f), np.eye(f.shape[1]), atol=1e-5
+        )
+
+
+def test_tucker_hooi_backend_parity():
+    x, _, _ = random_tucker_tensor(
+        jax.random.PRNGKey(4), (12, 10, 8), (3, 3, 2)
+    )
+    ref = tucker_hooi(x, (3, 3, 2), n_iters=4)
+    for backend in ("blocked_host", "pallas"):
+        ctx = repro.ExecutionContext.create(backend=backend, interpret=True)
+        res = tucker_hooi(x, (3, 3, 2), n_iters=4, ctx=ctx)
+        for a, b in zip(ref.fits, res.fits):
+            assert abs(a - b) < 1e-4, (backend, ref.fits, res.fits)
+
+
+def test_tucker_hooi_pallas_dispatches_kernel():
+    from repro.engine.execute import pallas_dispatch_count
+
+    x, _, _ = random_tucker_tensor(
+        jax.random.PRNGKey(5), (12, 10, 8), (3, 3, 2)
+    )
+    ctx = repro.ExecutionContext.create(backend="pallas", interpret=True)
+    before = pallas_dispatch_count()
+    tucker_hooi(x, (3, 3, 2), n_iters=1, ctx=ctx)
+    assert pallas_dispatch_count() > before
+
+
+def test_tucker_hooi_hosvd_only_and_tol():
+    x, _, _ = random_tucker_tensor(
+        jax.random.PRNGKey(6), (10, 10, 10), (3, 3, 3)
+    )
+    res0 = tucker_hooi(x, (3, 3, 3), n_iters=0)
+    assert res0.core.shape == (3, 3, 3) and len(res0.fits) == 1
+    res = tucker_hooi(x, (3, 3, 3), n_iters=20, tol=1e-6)
+    assert len(res.fits) < 20  # converged early on an exact-rank tensor
+
+
+def test_tucker_hooi_validates_ranks():
+    x, _, _ = random_tucker_tensor(
+        jax.random.PRNGKey(7), (8, 8, 8), (2, 2, 2)
+    )
+    with pytest.raises(ValueError, match="one rank per tensor mode"):
+        tucker_hooi(x, (2, 2))
+    with pytest.raises(ValueError, match="out of range"):
+        tucker_hooi(x, (2, 9, 2))
+
+
+def test_hosvd_init_orthonormal():
+    x, _, _ = random_tucker_tensor(
+        jax.random.PRNGKey(8), (10, 9, 8), (3, 2, 4)
+    )
+    for k, f in enumerate(hosvd_init(x, (3, 2, 4))):
+        assert f.shape == (x.shape[k], (3, 2, 4)[k])
+        np.testing.assert_allclose(
+            np.asarray(f.T @ f), np.eye(f.shape[1]), atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# tune cache: kind="multi_ttm"
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_tune_multi_ttm_persists_and_replays():
+    x, mats = _problem(DIMS3, RANKS3, seed=9)
+    with isolated_cache():
+        res = tune_multi_ttm(x, mats, 0, interpret=True)
+        assert "multi_ttm" in res.key and not res.cache_hit
+        res2 = tune_multi_ttm(x, mats, 0, interpret=True)
+        assert res2.cache_hit and res2.winner == res.winner
+        # the auto path replays exactly what was persisted
+        canon = (DIMS3[0],) + DIMS3[1:]
+        r = resolve_multi_ttm(canon, RANKS3[1:], 0, jnp.float32, None)
+        assert r.cache_hit and r.backend == res.winner.backend
+        assert r.plan == res.winner.plan
+        ctx = repro.ExecutionContext.create(backend="auto")
+        out = repro.multi_ttm(x, mats, 0, ctx=ctx)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(repro.multi_ttm(x, mats, 0)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+@pytest.mark.slow
+def test_tune_multi_ttm_through_engine_and_driver():
+    x, mats = _problem(DIMS3, RANKS3, seed=10)
+    with isolated_cache():
+        ctx = repro.ExecutionContext.create(
+            backend="auto", tune=True, interpret=True
+        )
+        repro.multi_ttm(x, mats, 1, ctx=ctx)
+        from repro.tune.cache import default_cache
+
+        keys = default_cache().keys()
+        assert any("multi_ttm" in k and "mode=1" in k for k in keys), keys
+        # idempotent: a second call replays, does not re-search
+        repro.multi_ttm(x, mats, 1, ctx=ctx)
+        assert default_cache().keys() == keys
+
+
+def test_for_problem_pins_multi_ttm_decisions():
+    with isolated_cache():
+        ctx = repro.ExecutionContext.for_problem(
+            DIMS3, RANKS3, backend="auto"
+        )
+        assert ctx.problem.rank == RANKS3 and ctx.problem.is_multi_ttm
+        pinned_modes = sorted(d.mode for d in ctx.decisions)
+        assert pinned_modes == [-1, 0, 1, 2]
+        # JSON round-trip preserves the tuple rank and every decision
+        ctx2 = repro.ExecutionContext.from_json(ctx.to_json())
+        assert ctx2 == ctx and ctx2.decisions == ctx.decisions
+        assert ctx2.problem.rank == RANKS3
+        x, mats = _problem(DIMS3, RANKS3, seed=11)
+        out = repro.multi_ttm(x, mats, 0, ctx=ctx2)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(repro.multi_ttm(x, mats, 0)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_for_problem_tucker_rejects_bad_ranks():
+    with pytest.raises(ValueError, match="one rank per tensor mode"):
+        repro.ExecutionContext.for_problem((8, 8, 8), (2, 2))
+
+
+def test_plan_decision_multi_ttm_roundtrip():
+    from repro.engine.context import PlanDecision
+
+    plan = MultiTTMPlan(8, (4, 4), (3, 2))
+    d = PlanDecision(-1, "pallas", plan)
+    d2 = PlanDecision.from_dict(d.to_dict())
+    assert d2 == d and isinstance(d2.plan, MultiTTMPlan)
+
+
+# ---------------------------------------------------------------------------
+# grid selection: branch-and-bound pinned to brute force
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "dims,ranks",
+    [
+        ((16, 16, 16), (4, 3, 2)),
+        ((24, 8, 12), (2, 2, 5)),
+        ((8, 8, 6, 4), (2, 2, 2, 2)),
+    ],
+)
+def test_select_tucker_grid_matches_brute_force(dims, ranks):
+    for procs in (2, 4, 6, 8, 12, 16, 24, 36, 48, 64):
+        for req in (False, True):
+            a = select_tucker_grid(dims, ranks, procs, req)
+            b = brute_force_tucker(dims, ranks, procs, req)
+            assert (a is None) == (b is None), (procs, req)
+            if a is not None:
+                assert a.grid == b.grid, (procs, req, a, b)
+                assert abs(a.words - b.words) < 1e-9
+
+
+def test_choose_tucker_grid_always_succeeds():
+    choice = choose_tucker_grid((16, 16, 16), (4, 3, 2), 8)
+    assert choice.procs == 8
+    assert all(16 % g == 0 for g in choice.grid)
+    # odd extents: falls back to the largest usable processor count
+    choice = choose_tucker_grid((7, 5, 3), (2, 2, 2), 8)
+    assert choice.procs <= 8
+    assert all(d % g == 0 for d, g in zip((7, 5, 3), choice.grid))
+
+
+def test_multi_ttm_sweep_words_matches_term_sum():
+    dims, ranks, grid = (16, 16, 16), (4, 3, 2), (2, 2, 2)
+    procs = math.prod(grid)
+    total = 0.0
+    for k, (d, pk) in enumerate(zip(dims, grid)):
+        rbar = math.prod(r for j, r in enumerate(ranks) if j != k)
+        q = procs // pk
+        total += (2 * (q - 1) / q + (pk - 1)) * (d // pk) * rbar
+    assert abs(multi_ttm_sweep_words(dims, ranks, grid) - total) < 1e-9
