@@ -25,11 +25,15 @@ CASES = [
 
 
 def _time(fn, reps: int = 3) -> float:
+    # best-of-reps, not mean: these rows feed the perf-trajectory gate,
+    # and one scheduler hiccup in a mean poisons the recorded walltime
     fn()  # warmup / compile
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / reps
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def rows() -> list[tuple[str, float, str]]:

@@ -1,0 +1,149 @@
+"""Perf-trajectory gate: compare two BENCH_*.json files and fail on
+regression beyond a noise threshold.
+
+The committed ``BENCH_*.json`` files form the repo's performance
+trajectory (one per recorded run, named by date).  This gate holds the
+line: given an older and a newer result file it compares every row
+present in BOTH by name and fails when the newer ``us_per_call`` exceeds
+the older by more than ``--threshold`` (relative; default 0.5 — CI
+machines are noisy, the gate is for step-function regressions, not
+percent-level drift).  Error rows (``name`` ending in ``[ERROR]``) in
+the newer file always fail.
+
+``--min-fused-speedup`` additionally asserts a per-row floor on the
+fused-sweep success metric: every ``cp_als_sweep[...]`` row in the newer
+file must report ``fused_speedup=<x>x`` at or above it (0.9 in CI —
+the marginal asymmetric shapes sit at parity within noise, and the floor
+catches the fused path becoming genuinely slower).
+``--require-fused-win`` asserts the headline criterion on top: at least
+one sweep row must beat 1x (the mode-reuse schedule keeps beating the
+per-mode dispatch it replaced somewhere).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.perf_gate OLD.json NEW.json \\
+        [--threshold 0.5] [--min-fused-speedup 0.9] [--require-fused-win]
+
+Exit status 0 = gate passes; 1 = regressions (one line per violation on
+stderr); 2 = bad invocation / unreadable input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_SPEEDUP_RE = re.compile(r"fused_speedup=([0-9.]+)x")
+
+
+def load_bench(path: str) -> dict[str, dict]:
+    """Load one BENCH json into ``{row name: row}`` (latest wins on
+    duplicate names)."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload.get("results", [])
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: 'results' is not a list")
+    return {r["name"]: r for r in rows if isinstance(r, dict) and "name" in r}
+
+
+def compare_bench(
+    old: dict[str, dict],
+    new: dict[str, dict],
+    *,
+    threshold: float = 0.5,
+    min_fused_speedup: float | None = None,
+    require_fused_win: bool = False,
+) -> list[str]:
+    """Return one violation string per gate failure (empty = pass).
+
+    Rows only in one file are ignored (benchmarks come and go); the gate
+    is about rows whose history continues.
+    """
+    violations: list[str] = []
+    for name, row in sorted(new.items()):
+        if name.endswith("[ERROR]"):
+            violations.append(f"{name}: errored: {row.get('derived', '')}")
+    for name in sorted(set(old) & set(new)):
+        if name.endswith("[ERROR]"):
+            continue
+        t_old = float(old[name].get("us_per_call", 0.0))
+        t_new = float(new[name].get("us_per_call", 0.0))
+        if t_old <= 0.0:
+            continue  # no baseline to regress against
+        ratio = t_new / t_old
+        if ratio > 1.0 + threshold:
+            violations.append(
+                f"{name}: {t_new:.1f}us vs {t_old:.1f}us baseline "
+                f"({ratio:.2f}x > {1.0 + threshold:.2f}x allowed)"
+            )
+    if min_fused_speedup is not None or require_fused_win:
+        sweep_rows = [n for n in new if n.startswith("cp_als_sweep[")]
+        if not sweep_rows:
+            violations.append(
+                "no cp_als_sweep[...] rows in the newer file (the fused-"
+                "sweep success metric is unrecorded)"
+            )
+        speedups: list[float] = []
+        for name in sorted(sweep_rows):
+            m = _SPEEDUP_RE.search(str(new[name].get("derived", "")))
+            if m is None:
+                violations.append(f"{name}: derived lacks fused_speedup=")
+                continue
+            s = float(m.group(1))
+            speedups.append(s)
+            if min_fused_speedup is not None and s < min_fused_speedup:
+                violations.append(
+                    f"{name}: fused_speedup={m.group(1)}x "
+                    f"< required {min_fused_speedup}x"
+                )
+        if require_fused_win and speedups and max(speedups) < 1.0:
+            violations.append(
+                f"no cp_als_sweep row beats per-mode (best fused_speedup "
+                f"{max(speedups)}x < 1.0x)"
+            )
+    return violations
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.perf_gate", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("old", help="baseline BENCH_*.json (earlier run)")
+    ap.add_argument("new", help="candidate BENCH_*.json (newer run)")
+    ap.add_argument("--threshold", type=float, default=0.5,
+                    help="relative walltime growth allowed (default 0.5)")
+    ap.add_argument("--min-fused-speedup", type=float, default=None,
+                    help="per-row floor for fused_speedup in cp_als_sweep "
+                         "rows")
+    ap.add_argument("--require-fused-win", action="store_true",
+                    help="at least one cp_als_sweep row must beat 1x")
+    args = ap.parse_args(argv)
+    try:
+        old = load_bench(args.old)
+        new = load_bench(args.new)
+    except (OSError, ValueError, json.JSONDecodeError, KeyError) as e:
+        print(f"perf_gate: cannot read inputs: {e}", file=sys.stderr)
+        return 2
+    violations = compare_bench(
+        old, new, threshold=args.threshold,
+        min_fused_speedup=args.min_fused_speedup,
+        require_fused_win=args.require_fused_win,
+    )
+    common = len(set(old) & set(new))
+    if violations:
+        for v in violations:
+            print(f"PERF REGRESSION: {v}", file=sys.stderr)
+        print(
+            f"perf_gate: {len(violations)} violation(s) over {common} "
+            f"common row(s)", file=sys.stderr,
+        )
+        return 1
+    print(f"perf_gate: OK ({common} common row(s) within threshold)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

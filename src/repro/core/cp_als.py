@@ -93,6 +93,7 @@ def cp_als(
     use_dimension_tree: bool = False,
     tol: float = 0.0,
     *,
+    sweep: str | None = None,
     ctx: "ExecutionContext | None" = None,
     backend=None,
     memory=None,
@@ -113,6 +114,17 @@ def cp_als(
     runs replay the tuned plans). A custom ``mttkrp_fn`` (e.g. a
     distributed Alg 3/4 shard_map callable) overrides the engine for the
     plain path.
+
+    ``sweep`` selects the sweep schedule: ``"per_mode"`` (the plain N-pass
+    Gauss-Seidel chain), ``"dimtree"`` (binary dimension-tree reuse, same
+    as ``use_dimension_tree=True``), ``"fused"`` (the arXiv:1708.08976
+    mode-reuse schedule — 2 tensor passes per sweep, single-dispatch
+    (B0, P') pair on the pallas backend; see
+    :func:`repro.engine.sweep.fused_als_sweep`), or ``"auto"`` (resolve
+    fused-vs-per-mode through the tune cache under ``kind="sweep"`` keys;
+    ``ctx.tune`` measures both on the first call and persists the
+    winner). All schedules are Gauss-Seidel exact. Default: derived from
+    ``use_dimension_tree``.
 
     ``ctx.distribution`` (or the legacy ``distributed=True`` /
     ``mesh``/``grid``/``procs`` kwargs) runs the stationary-tensor sweep
@@ -139,6 +151,23 @@ def cp_als(
     check_driver_options(
         ctx, mttkrp_fn=mttkrp_fn, use_dimension_tree=use_dimension_tree
     )
+    if sweep is not None:
+        if sweep not in ("per_mode", "dimtree", "fused", "auto"):
+            raise ValueError(
+                f"unknown sweep {sweep!r}; expected 'per_mode', 'dimtree', "
+                f"'fused', or 'auto'"
+            )
+        if use_dimension_tree and sweep != "dimtree":
+            raise ValueError(
+                f"sweep={sweep!r} conflicts with use_dimension_tree=True "
+                f"(pass only one of the two)"
+            )
+        if ctx.is_distributed and sweep != "per_mode":
+            raise ValueError(
+                f"sweep={sweep!r} is not supported on the distributed path "
+                f"(the stationary sweep already amortizes factor gathers; "
+                f"overlap='ring' is its comm/compute-overlap knob)"
+            )
     if ctx.is_distributed:
         from ..distributed.cp_als_parallel import cp_als_parallel
 
@@ -180,15 +209,33 @@ def cp_als(
         return a_new
 
     from ..engine import execute as engine_execute
+    from ..engine.sweep import fused_als_sweep
     from ..engine.tree import dimtree_als_sweep
 
     if mttkrp_fn is None:
         def mttkrp_fn(t, fs, mode):
             return engine_execute.mttkrp(t, fs, mode, ctx=ctx)
 
+    schedule = sweep if sweep is not None else (
+        "dimtree" if use_dimension_tree else "per_mode"
+    )
+    if schedule == "auto":
+        from ..tune.search import _is_concrete, resolve_sweep, tune_sweep
+
+        if ctx.tune and _is_concrete(x):
+            tune_sweep(
+                x, rank, ctx=ctx, memory=ctx.memory,
+                interpret=ctx.interpret, cache=ctx.plan_cache(),
+            )
+        schedule = resolve_sweep(
+            x.shape, rank, x.dtype, ctx.memory, cache=ctx.plan_cache()
+        ).variant
+
     for it in range(n_iters):
-        if use_dimension_tree:
+        if schedule == "dimtree":
             dimtree_als_sweep(x, factors, update, ctx=ctx)
+        elif schedule == "fused":
+            fused_als_sweep(x, factors, update, ctx=ctx)
         else:
             for mode in range(n):
                 factors[mode] = update(mode, mttkrp_fn(x, factors, mode))

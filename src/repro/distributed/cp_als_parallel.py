@@ -54,6 +54,13 @@ from .mttkrp_parallel import (
     gather_factor,
     tensor_spec,
 )
+from .ring import (
+    ring_all_gather_parts,
+    ring_assemble,
+    ring_index,
+    ring_reduce_scatter,
+    ring_size,
+)
 
 
 def gathered_block_spec(k: int) -> P:
@@ -76,6 +83,7 @@ def _sweep_local(
     ndim: int,
     local_fn: LocalFn,
     compute_fit: bool,
+    overlap: str = "none",
 ):
     """One full ALS sweep (all N mode updates) under shard_map.
 
@@ -84,13 +92,29 @@ def _sweep_local(
     the replicated Gram G_k = A_k^T A_k.  Mirrors ``core.cp_als.update``
     arithmetic exactly (same solve dtype, ridge, λ floor) so the
     distributed fits track the sequential driver to fp32 tolerance.
+
+    ``overlap="ring"`` spells the two per-factor collectives as
+    ``ppermute`` rings (:mod:`repro.distributed.ring`) and consumes factor
+    ``mode-1``'s ring arrivals chunk-by-chunk inside mode ``mode``'s local
+    MTTKRP: chunk t (from ring source ``(me - t) mod q``) multiplies the
+    matching slice of ``x_loc`` along axis ``mode-1`` as soon as it lands,
+    so each ring hop's transfer can hide behind one slice of compute.  The
+    arrivals are pre-normalization (λ is not known until the Gram
+    all-reduce completes, and waiting for it would re-serialize the ring),
+    so the chunked MTTKRP runs on raw blocks and the result is rescaled by
+    ``1/λ`` per column at the end — exact up to rounding, since the MTTKRP
+    is linear in each factor column.  Total bytes are unchanged: same
+    2-collectives-per-factor model, verified against compiled HLO in
+    ``tests/dist_worker.py``.
     """
+    ring = overlap == "ring"
     f_locs, blocks, grams = list(f_locs), list(blocks), list(grams)
     rank = f_locs[0].shape[-1]
     dtype = x_loc.dtype
     solve_dtype = jnp.float32 if dtype != jnp.float64 else dtype
     weights = jnp.ones((rank,), dtype)
     b_last = a_last = None
+    pending = None  # ring arrivals of factor mode-1, consumed chunk-wise
     for mode in range(ndim):
         gamma = jnp.ones((rank, rank), grams[0].dtype)
         for k in range(ndim):
@@ -98,14 +122,37 @@ def _sweep_local(
                 gamma = gamma * grams[k]
         # MTTKRP: reuse the carried gathered blocks (no gathers here —
         # each was produced by the all-gather after its factor's update)
-        c = local_fn(
-            x_loc,
-            [blocks[k] if k != mode else None for k in range(ndim)],
-            mode,
-        )
-        b_loc = jax.lax.psum_scatter(
-            c, hyperslice_axes(ndim, mode), scatter_dimension=0, tiled=True
-        )
+        if pending is not None:
+            parts, lam_prev, q_prev, me_prev = pending
+            pending = None
+            prev = mode - 1
+            w = x_loc.shape[prev] // q_prev
+            c = None
+            for t, part in enumerate(parts):
+                src = (me_prev - t) % q_prev
+                x_sl = jax.lax.dynamic_slice_in_dim(
+                    x_loc, src * w, w, axis=prev
+                )
+                mats = [
+                    blocks[k] if k != mode else None for k in range(ndim)
+                ]
+                mats[prev] = part
+                ct = local_fn(x_sl, mats, mode)
+                c = ct if c is None else c + ct
+            c = c / lam_prev
+        else:
+            c = local_fn(
+                x_loc,
+                [blocks[k] if k != mode else None for k in range(ndim)],
+                mode,
+            )
+        if ring:
+            b_loc = ring_reduce_scatter(c, hyperslice_axes(ndim, mode))
+        else:
+            b_loc = jax.lax.psum_scatter(
+                c, hyperslice_axes(ndim, mode),
+                scatter_dimension=0, tiled=True,
+            )
         # normal-equations solve, rows local (Γ is replicated)
         gamma32 = gamma.astype(solve_dtype)
         ridge = 1e-5 * jnp.trace(gamma32) / rank + 1e-12
@@ -114,7 +161,12 @@ def _sweep_local(
             b_loc.astype(solve_dtype).T,
         ).T.astype(dtype)
         # the one all-gather of this factor for the sweep
-        blk = gather_factor(a_loc, ndim, mode)
+        if ring:
+            axes_g = hyperslice_axes(ndim, mode)
+            parts = ring_all_gather_parts(a_loc, axes_g)
+            blk = ring_assemble(parts, axes_g)
+        else:
+            blk = gather_factor(a_loc, ndim, mode)
         # full Gram from the gathered block-rows: one R x R all-reduce over
         # the mode-n fiber (q = P_n), the sweep's only solve collective
         g_raw = jax.lax.psum(blk.T @ blk, (mode_axis(mode),))
@@ -126,6 +178,10 @@ def _sweep_local(
         grams[mode] = g_raw / (lam[:, None] * lam[None, :])
         f_locs[mode] = a_loc
         blocks[mode] = blk
+        if ring and mode < ndim - 1:
+            # hand the raw arrivals to mode+1's chunked MTTKRP; λ rides
+            # along so the consumer can rescale without a ring barrier
+            pending = (parts, lam, ring_size(axes_g), ring_index(axes_g))
         weights = lam
         b_last, a_last = b_loc, a_loc * lam
     if compute_fit:
@@ -181,6 +237,9 @@ def build_cp_sweep(
         )
     if local_fn is None:
         local_fn = engine_local_fn(ctx)
+    overlap = (
+        ctx.distribution.overlap if ctx.distribution is not None else "none"
+    )
     in_specs = (
         tensor_spec(ndim),
         tuple(factor_spec(ndim, k) for k in range(ndim)),
@@ -196,7 +255,8 @@ def build_cp_sweep(
         P(),
     )
     body = functools.partial(
-        _sweep_local, ndim=ndim, local_fn=local_fn, compute_fit=compute_fit
+        _sweep_local, ndim=ndim, local_fn=local_fn,
+        compute_fit=compute_fit, overlap=overlap,
     )
     # check_rep=False: the body contains linalg.solve (no replication rule
     # on 0.4.x) and, under backend="pallas"/"auto", pallas_call

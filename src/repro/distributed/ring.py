@@ -1,0 +1,123 @@
+"""Ring-chunked collectives: ``ppermute`` spellings of the sweep's
+all-gather and reduce-scatter with *identical* ring traffic.
+
+Why: in the stationary CP sweep every factor's all-gather serializes
+against the next mode's local MTTKRP — XLA sees one monolithic collective
+whose full result the next contraction consumes. Re-spelling the gather
+as its own ring (q-1 ``ppermute`` steps, each moving one shard-chunk)
+exposes the per-chunk dataflow: ring step t's transfer depends only on
+step t-1, and a consumer that contracts chunk t as it arrives (see
+``cp_als_parallel._sweep_local``'s ``overlap="ring"`` path) lets the
+compiler hide each hop behind a slice of compute.
+
+Traffic is preserved EXACTLY: an all-gather of an ``n``-word shard over
+``q`` processors costs ``(q-1) * n`` words on a ring, and so do the
+``q-1`` permutes of one ``n``-word chunk here; a reduce-scatter of a
+``q*n``-word operand costs ``(q-1) * n``, ditto. ``tests/dist_worker.py``
+pins the compiled-HLO byte counts of the ring sweep to the same
+``stationary_sweep_words`` model as the monolithic one.
+
+Linearization: multi-axis rings run over the listed mesh axes in
+row-major order (first listed outermost) — the same flattening
+``jax.lax.all_gather(..., tiled=True)`` and ``psum_scatter`` use, so the
+assembled results are bit-compatible orderings (sums differ only in
+association).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _as_axes(axes) -> tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def ring_size(axes) -> int:
+    """Number of processors on the (possibly multi-axis) ring."""
+    return jax.lax.psum(1, _as_axes(axes))
+
+
+def ring_index(axes) -> jax.Array:
+    """This processor's linearized position on the ring (row-major over
+    the listed axes, first axis outermost — the ``tiled=True`` order)."""
+    idx = None
+    for name in _as_axes(axes):
+        i = jax.lax.axis_index(name)
+        idx = i if idx is None else idx * jax.lax.psum(1, name) + i
+    return idx
+
+
+def _ring_perm(q: int) -> list[tuple[int, int]]:
+    # shard j receives from shard j-1 each step (forward ring)
+    return [(i, (i + 1) % q) for i in range(q)]
+
+
+def ring_all_gather_parts(x: jax.Array, axes) -> list[jax.Array]:
+    """The raw ring schedule: ``q`` chunks, where ``parts[t]`` is the chunk
+    that *arrives at step t* — from ring source ``(me - t) mod q``
+    (``parts[0]`` is this processor's own shard). Exposed so a consumer
+    can contract each chunk as it lands; total transfer is ``(q-1)``
+    chunk-hops, the exact ring all-gather volume."""
+    axes = _as_axes(axes)
+    q = ring_size(axes)
+    parts = [x]
+    if q == 1:
+        return parts
+    perm = _ring_perm(q)
+    acc = x
+    for _ in range(1, q):
+        acc = jax.lax.ppermute(acc, axes, perm)
+        parts.append(acc)
+    return parts
+
+
+def ring_assemble(parts: Sequence[jax.Array], axes) -> jax.Array:
+    """Order ring arrivals into the ``all_gather(..., axis=0, tiled=True)``
+    layout. Arrival t came from source ``(me - t) mod q``; reversing the
+    stack puts block u at source ``(me + 1 + u) mod q``, and rolling by
+    ``me + 1`` blocks lands every source at its own index."""
+    q = len(parts)
+    if q == 1:
+        return parts[0]
+    me = ring_index(axes)
+    rows = parts[0].shape[0]
+    stacked = jnp.concatenate(parts[::-1], axis=0)
+    return jnp.roll(stacked, shift=(me + 1) * rows, axis=0)
+
+
+def ring_all_gather(x: jax.Array, axes) -> jax.Array:
+    """Drop-in for ``jax.lax.all_gather(x, axes, axis=0, tiled=True)`` as
+    a ``ppermute`` ring: same result, same ring traffic, chunked
+    dataflow."""
+    return ring_assemble(ring_all_gather_parts(x, axes), axes)
+
+
+def ring_reduce_scatter(c: jax.Array, axes) -> jax.Array:
+    """Drop-in for ``jax.lax.psum_scatter(c, axes, scatter_dimension=0,
+    tiled=True)`` as a ``ppermute`` ring.
+
+    Each step forwards a partial sum one hop and folds in the local chunk
+    destined ``t+1`` hops downstream; after ``q-1`` steps processor ``j``
+    holds block ``j`` fully summed. ``q-1`` hops of one output-sized
+    chunk — the exact ring reduce-scatter volume. Summation order differs
+    from ``psum_scatter`` (ring association), so results match to
+    floating-point tolerance, not bitwise."""
+    axes = _as_axes(axes)
+    q = ring_size(axes)
+    if q == 1:
+        return c
+    me = ring_index(axes)
+    rows = c.shape[0] // q
+    def chunk(i):
+        return jax.lax.dynamic_slice_in_dim(c, i * rows, rows, axis=0)
+
+    perm = _ring_perm(q)
+    acc = chunk((me - 1) % q)
+    for t in range(1, q):
+        acc = jax.lax.ppermute(acc, axes, perm)
+        acc = acc + chunk((me - t - 1) % q)
+    return acc

@@ -53,6 +53,7 @@ from .mesh import (
     validate_tucker_grid,
 )
 from .mttkrp_parallel import factor_spec, gather_factors, tensor_spec
+from .ring import ring_all_gather
 
 
 def _engine_multi_ttm(ctx) -> Callable:
@@ -164,11 +165,18 @@ def _tucker_sweep_local(
     grid: tuple[int, ...],
     local_fn: Callable,
     compute_fit: bool,
+    overlap: str = "none",
 ):
     """One full HOOI sweep (all N mode updates) under shard_map; factors
     are replicated, X stays put, and the only collectives are one
     hyperslice all-reduce + one fiber all-gather of the partial Y^(k)
-    per mode (see :func:`multi_ttm_sweep_words`)."""
+    per mode (see :func:`multi_ttm_sweep_words`).
+
+    ``overlap="ring"`` spells the fiber all-gather as a ``ppermute`` ring
+    (:func:`repro.distributed.ring.ring_all_gather`) — same result, same
+    ring bytes, but the transfer is exposed as ``P_k - 1`` chunk hops the
+    scheduler can interleave with the eigendecomposition's Gram build.
+    """
     factors = list(factors)
     dtype = x_loc.dtype
     zm = None
@@ -180,9 +188,12 @@ def _tucker_sweep_local(
         z_part = local_fn(x_loc, mats, k)
         z_rows = jax.lax.psum(z_part, hyperslice_axes(ndim, k))
         zm_rows = _unfold_rows(z_rows, k)
-        zm = jax.lax.all_gather(
-            zm_rows, (mode_axis(k),), axis=0, tiled=True
-        )
+        if overlap == "ring":
+            zm = ring_all_gather(zm_rows, (mode_axis(k),))
+        else:
+            zm = jax.lax.all_gather(
+                zm_rows, (mode_axis(k),), axis=0, tiled=True
+            )
         factors[k] = _leading_eigvecs(zm @ zm.T, ranks[k]).astype(dtype)
     # the core falls out of the last mode update (mode N-1 rows of zm):
     # (R_{N-1}, prod_{j<N-1} R_j) -> (R_0, ..., R_{N-1})
@@ -215,6 +226,9 @@ def build_tucker_sweep(
         mesh.shape[mode_axis(k)] for k in range(ndim)
     )
     local_fn = _engine_multi_ttm(ctx)
+    overlap = "none"
+    if ctx is not None and getattr(ctx, "distribution", None) is not None:
+        overlap = ctx.distribution.overlap
     in_specs = (
         tensor_spec(ndim),
         tuple(P(None, None) for _ in range(ndim)),
@@ -227,7 +241,7 @@ def build_tucker_sweep(
     )
     body = functools.partial(
         _tucker_sweep_local, ndim=ndim, ranks=ranks, grid=grid,
-        local_fn=local_fn, compute_fit=compute_fit,
+        local_fn=local_fn, compute_fit=compute_fit, overlap=overlap,
     )
     # check_rep=False: the body contains eigh (no replication rule) and,
     # under backend="pallas"/"auto", pallas_call

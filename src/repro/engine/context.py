@@ -151,9 +151,16 @@ class Distribution:
     procs: int | None = None
     p0: int = 1
     check_rep: bool | None = None
+    overlap: str = "none"
     mesh: Any = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
+        if self.overlap not in ("none", "ring"):
+            raise ValueError(
+                f"overlap must be 'none' or 'ring' (ring = ppermute-chunked "
+                f"collectives overlapping the local MTTKRP), got "
+                f"{self.overlap!r}"
+            )
         if self.grid is not None:
             object.__setattr__(self, "grid", tuple(int(g) for g in self.grid))
             from ..distributed.mesh import validate_grid  # layer cycle
@@ -172,6 +179,7 @@ class Distribution:
             "procs": self.procs,
             "p0": self.p0,
             "check_rep": self.check_rep,
+            "overlap": self.overlap,
         }
 
     @classmethod
@@ -182,6 +190,7 @@ class Distribution:
             procs=d.get("procs"),
             p0=int(d.get("p0", 1)),
             check_rep=d.get("check_rep"),
+            overlap=str(d.get("overlap", "none")),
         )
 
 
@@ -291,6 +300,7 @@ class ExecutionContext:
     backend: str = "einsum"
     memory: Memory | None = None
     out_dtype: str | None = None
+    compute_dtype: str | None = None
     interpret: bool | None = None
     tune: bool = False
     cache_path: str | None = None
@@ -315,6 +325,22 @@ class ExecutionContext:
                 raise ValueError(
                     f"out_dtype {self.out_dtype!r} is not a dtype: {e}"
                 ) from None
+        if self.compute_dtype is not None:
+            import jax.numpy as jnp
+
+            try:
+                dt = jnp.dtype(self.compute_dtype)
+            except TypeError as e:
+                raise ValueError(
+                    f"compute_dtype {self.compute_dtype!r} is not a dtype: "
+                    f"{e}"
+                ) from None
+            if not jnp.issubdtype(dt, jnp.floating):
+                raise ValueError(
+                    f"compute_dtype must be a float dtype (inputs are cast "
+                    f"to it; accumulation stays fp32), got "
+                    f"{self.compute_dtype!r}"
+                )
         if self.tune and self.is_distributed:
             raise _err_tune_distributed()
         if self.tune and self.backend != "auto":
@@ -338,6 +364,7 @@ class ExecutionContext:
         *,
         memory: Memory | None = None,
         out_dtype=None,
+        compute_dtype=None,
         interpret: bool | None = None,
         tune: bool = False,
         cache_path: str | None = None,
@@ -347,6 +374,7 @@ class ExecutionContext:
         procs: int | None = None,
         p0: int = 1,
         check_rep: bool | None = None,
+        overlap: str = "none",
     ) -> "ExecutionContext":
         """Build and eagerly validate a context — THE constructor.
 
@@ -357,7 +385,7 @@ class ExecutionContext:
         """
         dist = None
         if distributed or mesh is not None or grid is not None \
-                or procs is not None:
+                or procs is not None or overlap != "none":
             if mesh is not None and grid is None:
                 # derive the grid from the mesh axes (m0..m{N-1}, opt. r)
                 names = [n for n in mesh.axis_names if n != "r"]
@@ -366,16 +394,21 @@ class ExecutionContext:
                     p0 = mesh.shape["r"]
             dist = Distribution(
                 grid=tuple(grid) if grid is not None else None,
-                procs=procs, p0=p0, check_rep=check_rep, mesh=mesh,
+                procs=procs, p0=p0, check_rep=check_rep, overlap=overlap,
+                mesh=mesh,
             )
         if out_dtype is not None and not isinstance(out_dtype, str):
             import jax.numpy as jnp
 
             out_dtype = jnp.dtype(out_dtype).name
+        if compute_dtype is not None and not isinstance(compute_dtype, str):
+            import jax.numpy as jnp
+
+            compute_dtype = jnp.dtype(compute_dtype).name
         return cls(
             backend=backend, memory=memory, out_dtype=out_dtype,
-            interpret=interpret, tune=tune, cache_path=cache_path,
-            distribution=dist,
+            compute_dtype=compute_dtype, interpret=interpret, tune=tune,
+            cache_path=cache_path, distribution=dist,
         )
 
     @classmethod
@@ -646,6 +679,7 @@ class ExecutionContext:
             "backend": self.backend,
             "memory": mem,
             "out_dtype": self.out_dtype,
+            "compute_dtype": self.compute_dtype,
             "interpret": self.interpret,
             "tune": self.tune,
             "cache_path": self.cache_path,
@@ -681,6 +715,7 @@ class ExecutionContext:
             backend=str(d.get("backend", "einsum")),
             memory=mem,
             out_dtype=d.get("out_dtype"),
+            compute_dtype=d.get("compute_dtype"),
             interpret=d.get("interpret"),
             tune=bool(d.get("tune", False)),
             cache_path=d.get("cache_path"),
@@ -748,7 +783,7 @@ _DEFAULT_MEMO: dict[str, "ExecutionContext"] = {}
 
 _CREATE_KEYS = (
     {f.name for f in fields(ExecutionContext)}
-    | {"distributed", "mesh", "grid", "procs", "p0", "check_rep"}
+    | {"distributed", "mesh", "grid", "procs", "p0", "check_rep", "overlap"}
 ) - {"distribution", "problem", "decisions"}
 
 

@@ -84,6 +84,38 @@ def _count_pallas() -> None:
     _pallas_dispatches += 1
 
 
+def _cast_compute(ctx: ExecutionContext, x, arrays, out_dtype):
+    """Apply the context's mixed-precision policy: cast the tensor and the
+    factor/matrix operands to ``ctx.compute_dtype`` (the bandwidth win) and
+    default the output dtype to the ORIGINAL input dtype, so the policy is
+    transparent end to end (bf16 streams, fp32 results). Accumulation
+    stays fp32 on every backend: the pallas kernels accumulate in
+    ``acc_dtype=float32`` already, and the einsum paths get
+    ``preferred_element_type=float32`` when a policy is active.
+
+    Returns ``(x, arrays, out_dtype, active)``."""
+    if ctx.compute_dtype is None:
+        return x, arrays, out_dtype, False
+    cd = jnp.dtype(ctx.compute_dtype)
+    if out_dtype is None:
+        out_dtype = x.dtype
+    x = x.astype(cd)
+    arrays = [a.astype(cd) if a is not None else None for a in arrays]
+    return x, arrays, out_dtype, True
+
+
+def _einsum_mttkrp_f32acc(x, factors, mode):
+    """The einsum backend under a compute-dtype policy: same contraction as
+    ``core.mttkrp.mttkrp`` but with fp32 accumulation forced."""
+    from ..core.mttkrp import _einsum_spec
+
+    ins = [f for k, f in enumerate(factors) if k != mode]
+    return jnp.einsum(
+        _einsum_spec(x.ndim, mode), x, *ins, optimize="optimal",
+        preferred_element_type=jnp.float32,
+    )
+
+
 def mttkrp(
     x: jax.Array,
     factors: Sequence[jax.Array],
@@ -126,6 +158,7 @@ def mttkrp(
     interpret = ctx.interpret
     if out_dtype is None:
         out_dtype = ctx.out_dtype
+    x, factors, out_dtype, mixed = _cast_compute(ctx, x, factors, out_dtype)
     if backend == "auto":
         rank = next(
             f.shape[1] for k, f in enumerate(factors) if k != mode
@@ -150,7 +183,8 @@ def mttkrp(
         kernel_variant = kernel_variant or decision.variant
     check_backend(backend)
     if backend == "einsum":
-        out = _einsum_mttkrp(x, factors, mode)
+        out = _einsum_mttkrp_f32acc(x, factors, mode) if mixed \
+            else _einsum_mttkrp(x, factors, mode)
         return out.astype(out_dtype) if out_dtype is not None else out
     if backend == "blocked_host":
         if block is None:
@@ -160,7 +194,8 @@ def mttkrp(
         return out.astype(out_dtype) if out_dtype is not None else out
     # pallas
     if x.ndim < 3:  # the kernels need >= 2 contraction dims
-        out = _einsum_mttkrp(x, factors, mode)
+        out = _einsum_mttkrp_f32acc(x, factors, mode) if mixed \
+            else _einsum_mttkrp(x, factors, mode)
         return out.astype(out_dtype) if out_dtype is not None else out
     from ..kernels import ops as kernel_ops  # lazy: avoids import cycle
 
@@ -168,6 +203,9 @@ def mttkrp(
         rank = next(
             f.shape[1] for k, f in enumerate(factors) if k != mode
         )
+        if mixed:
+            # dtype-aware planning: same physical budget, narrower items
+            memory = memory.with_itemsize(x.dtype.itemsize)
         plan = choose_blocks(
             _mode_first(x.shape, mode), rank, x.dtype.itemsize,
             memory=memory,
@@ -227,6 +265,9 @@ def contract_partial(
     memory = ctx.memory
     interpret = ctx.interpret
     out_dtype = ctx.out_dtype  # same dtype policy as the plain path
+    node, factors, out_dtype, mixed = _cast_compute(
+        ctx, node, factors, out_dtype
+    )
     modes = tuple(modes)
     drop = tuple(drop)
     keep = tuple(m for m in modes if m not in drop)
@@ -263,8 +304,9 @@ def contract_partial(
             ops.append(factors[m])
             subs.append(_L[m] + _RANK)
         sub_out = "".join(_L[m] for m in keep) + _RANK
+        kw = {"preferred_element_type": jnp.float32} if mixed else {}
         out = jnp.einsum(
-            ",".join(subs) + "->" + sub_out, *ops, optimize="optimal"
+            ",".join(subs) + "->" + sub_out, *ops, optimize="optimal", **kw
         )
         return out.astype(out_dtype) if out_dtype is not None else out
 
@@ -283,6 +325,8 @@ def contract_partial(
     i_rows = math.prod(keep_sizes) if keep_sizes else 1
     fs = [factors[m] for m in drop]
     itemsize = node.dtype.itemsize
+    if mixed and memory is not None:
+        memory = memory.with_itemsize(itemsize)  # dtype-aware planning
     _count_pallas()
     if has_rank:
         xp = xp.reshape((i_rows,) + drop_sizes + (rank,))
@@ -293,7 +337,8 @@ def contract_partial(
             ) if memory is not None else None
         )
         out = kernel_ops.mttkrp_partial_canonical_pallas(
-            xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
+            xp, fs, plan=plan, interpret=interpret,
+            out_dtype=out_dtype if mixed else node.dtype,
         )
     else:
         xp = xp.reshape((i_rows,) + drop_sizes)
@@ -303,7 +348,8 @@ def contract_partial(
             ) if memory is not None else None
         )
         out = kernel_ops.mttkrp_canonical_pallas(
-            xp, fs, plan=plan, interpret=interpret, out_dtype=node.dtype
+            xp, fs, plan=plan, interpret=interpret,
+            out_dtype=out_dtype if mixed else node.dtype,
         )
     out = out.reshape(keep_sizes + (rank,))
     return out.astype(out_dtype) if out_dtype is not None else out
@@ -313,7 +359,7 @@ def contract_partial(
 # Multi-TTM (the Tucker/HOSVD kernel, arXiv:2207.10437)
 # ---------------------------------------------------------------------------
 
-def _multi_ttm_einsum(x, matrices, keep):
+def _multi_ttm_einsum(x, matrices, keep, f32_acc=False):
     subs, ops, out = [_L[: x.ndim]], [x], ""
     for k in range(x.ndim):
         if k == keep:
@@ -322,7 +368,10 @@ def _multi_ttm_einsum(x, matrices, keep):
         ops.append(matrices[k])
         subs.append(_L[k] + _RANKS[k])
         out += _RANKS[k]
-    return jnp.einsum(",".join(subs) + "->" + out, *ops, optimize="optimal")
+    kw = {"preferred_element_type": jnp.float32} if f32_acc else {}
+    return jnp.einsum(
+        ",".join(subs) + "->" + out, *ops, optimize="optimal", **kw
+    )
 
 
 def _keep_first(shape: Sequence[int], keep: int) -> tuple[int, ...]:
@@ -393,6 +442,9 @@ def multi_ttm(
     interpret = ctx.interpret
     if out_dtype is None:
         out_dtype = ctx.out_dtype
+    x, matrices, out_dtype, mixed = _cast_compute(
+        ctx, x, matrices, out_dtype
+    )
     ranks = tuple(
         m.shape[1] for k, m in enumerate(matrices) if k != keep
     )
@@ -430,7 +482,7 @@ def multi_ttm(
         block = block if block is not None else decision.block
     check_backend(backend)
     if backend == "einsum" or (backend == "pallas" and n < 3):
-        out = _multi_ttm_einsum(x, matrices, keep)
+        out = _multi_ttm_einsum(x, matrices, keep, f32_acc=mixed)
         return out.astype(out_dtype) if out_dtype is not None else out
     if backend == "blocked_host":
         from ..core.blocked import multi_ttm_blocked
@@ -460,6 +512,8 @@ def multi_ttm(
         # the keep=None kernel contracts the trailing N-1 modes only (the
         # lead mode is contracted by the final small matmul)
         kernel_ranks = ranks[1:] if keep is None else ranks
+        if mixed:
+            memory = memory.with_itemsize(x.dtype.itemsize)
         plan = choose_multi_ttm_blocks(
             canon, kernel_ranks, x.dtype.itemsize, memory=memory
         )

@@ -72,6 +72,15 @@ class Memory:
     def budget_words(self) -> int:
         return self.budget_bytes // self.itemsize
 
+    def with_itemsize(self, itemsize: int) -> "Memory":
+        """Same memory, re-described for a different element width — the
+        dtype-aware planning hook: a bf16 compute dtype halves ``itemsize``
+        so ``budget_words`` doubles and every Eq-9 fit admits larger
+        blocks on the *same physical budget*."""
+        if itemsize == self.itemsize:
+            return self
+        return Memory(self.budget_bytes, self.lane, self.sublane, itemsize)
+
 
 @dataclass(frozen=True)
 class BlockPlan:
@@ -268,6 +277,91 @@ def choose_blocks(
             break  # all-1 blocks; nothing fits this memory
         dims[j] //= 2
         plan = BlockPlan(dims[0], tuple(dims[1:-1]), dims[-1], x_has_rank)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Fused-sweep planning (the arXiv:1708.08976 mode-reuse schedule)
+# ---------------------------------------------------------------------------
+
+def fused_pair_working_set_words(plan: BlockPlan) -> int:
+    """Eq-9 analogue for the fused (B^(0), P) pair kernel
+    (:mod:`repro.kernels.sweep`): the per-mode working set plus the
+    rank-augmented partial tile ``bi * prod(bc[:-1]) * br`` that the second
+    output keeps VMEM-resident across the innermost contraction sweep.
+
+    X tile + factor tiles + KRP weight + B^(0) tile + P tile — the
+    mode-reuse schedule pays one extra output tile to avoid re-streaming
+    the tensor once per mode."""
+    prod_c = math.prod(plan.block_contract)
+    x_tile = plan.block_i * prod_c
+    f_tiles = sum(c * plan.block_r for c in plan.block_contract)
+    krp = prod_c * plan.block_r
+    b0_tile = plan.block_i * plan.block_r
+    p_tile = plan.block_i * math.prod(plan.block_contract[:-1]) * plan.block_r
+    return x_tile + f_tiles + krp + b0_tile + p_tile
+
+
+def choose_sweep_blocks(
+    shape: Sequence[int],
+    rank: int,
+    itemsize: int = 4,
+    vmem_budget: int = VMEM_BUDGET,
+    *,
+    memory: Memory | None = None,
+) -> BlockPlan:
+    """Block selection for the fused pair kernel: start from the per-mode
+    MTTKRP plan, then keep shrinking until the *fused* working set
+    (:func:`fused_pair_working_set_words`) also fits — same shrink order
+    as :func:`choose_blocks` (rank, then output rows, then non-minor
+    contraction dims, then the minor dim, then relax alignment)."""
+    if memory is None:
+        memory = Memory.tpu_vmem(vmem_budget, itemsize)
+    lane, sublane = memory.lane, memory.sublane
+    n = len(shape)
+    plan = choose_blocks(shape, rank, memory=memory)
+
+    def fused_fits(p: BlockPlan) -> bool:
+        return (
+            fused_pair_working_set_words(p) * memory.itemsize
+            <= memory.budget_bytes
+        )
+
+    def floor(extent: int, unit: int) -> int:
+        return max(1, extent) if extent <= unit else unit
+
+    fi = floor(shape[0], sublane)
+    fr = floor(rank, lane)
+    fc = [
+        floor(shape[d], lane if d == n - 1 else sublane) for d in range(1, n)
+    ]
+    while not fused_fits(plan):
+        bi, br = plan.block_i, plan.block_r
+        bc = list(plan.block_contract)
+        if br > fr:
+            br = max(fr, br // 2)
+        elif bi > fi:
+            bi = max(fi, bi // 2)
+        else:
+            shrunk = False
+            for d in range(len(bc) - 1):
+                if bc[d] > fc[d]:
+                    bc[d] = max(fc[d], bc[d] // 2)
+                    shrunk = True
+                    break
+            if not shrunk:
+                if bc and bc[-1] > fc[-1]:
+                    bc[-1] = max(fc[-1], bc[-1] // 2)
+                else:
+                    break
+        plan = BlockPlan(bi, tuple(bc), br)
+    while not fused_fits(plan):
+        dims = [plan.block_i, *plan.block_contract, plan.block_r]
+        j = max(range(len(dims)), key=lambda k: dims[k])
+        if dims[j] <= 1:
+            break
+        dims[j] //= 2
+        plan = BlockPlan(dims[0], tuple(dims[1:-1]), dims[-1])
     return plan
 
 

@@ -1,0 +1,201 @@
+"""Fused-sweep Pallas kernel: the Gauss-Seidel sweep's opening pair in ONE
+pallas_call.
+
+A CP-ALS sweep needs, per mode, one MTTKRP — and the per-mode chain re-reads
+the tensor N times. The shared-memory MTTKRP paper (Hayashi et al.,
+arXiv:1708.08976) shows the chain has inter-mode reuse: every mode's MTTKRP
+except the last shares the contraction ``X x_{N-1} A^(N-1)`` with the
+*pre-sweep* factor values, so one tensor pass can produce both
+
+    B^(0)(i, r)            = sum_{c_1..c_{N-1}} X(i, c..) prod_d A_d(c_d, r)
+    P(i, c_1..c_{N-2}, r)  = sum_{c_{N-1}}      X(i, c..) A_{N-1}(c_{N-1}, r)
+
+without breaking Gauss-Seidel order (both consume only pre-sweep factors;
+modes 1..N-2 then contract P against already-updated factors, and mode N-1
+runs a fresh full MTTKRP — see :mod:`repro.engine.sweep` for the schedule).
+
+This kernel computes the (B^(0), P) pair as a two-output ``pallas_call``
+with the exact output-stationary layout of :mod:`repro.kernels.mttkrpn`:
+grid ``(r, i, c_1..c_{N-1})`` with the contraction tiles innermost, the
+X tile loaded ONCE per grid step and consumed by both accumulators —
+B^(0) against the chained Khatri-Rao weight block (MXU), P against the
+last factor tile alone (MXU). Both outputs stay VMEM-resident across
+their contraction revisits (B^(0) across all contraction steps; P across
+the innermost ``c_{N-1}`` sweep, the only grid dim its index map drops).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .mttkrpn import _compiler_params
+
+
+def _fused_pair_kernel(*refs, n_contract: int, acc_dtype):
+    x_ref = refs[0]
+    f_refs = refs[1 : 1 + n_contract]
+    b0_ref = refs[1 + n_contract]
+    p_ref = refs[2 + n_contract]
+
+    first_contract_step = pl.program_id(2) == 0
+    for d in range(1, n_contract):
+        first_contract_step &= pl.program_id(2 + d) == 0
+
+    @pl.when(first_contract_step)
+    def _zero_b0():
+        b0_ref[...] = jnp.zeros_like(b0_ref)
+
+    # P's block map keeps (i, c_1..c_{N-2}, r): the block is revisited only
+    # across the innermost c_{N-1} sweep, so it zeroes when that dim wraps
+    @pl.when(pl.program_id(2 + n_contract - 1) == 0)
+    def _zero_p():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    br = f_refs[0].shape[1]
+    bi = x_ref.shape[0]
+    # chained outer product over the contraction tile dims (Khatri-Rao)
+    w = f_refs[0][...].astype(acc_dtype)  # (b1, br)
+    for f in f_refs[1:]:
+        ft = f[...].astype(acc_dtype)  # (bd, br)
+        w = (w[:, None, :] * ft[None, :, :]).reshape(-1, br)
+    xm = x_ref[...].reshape(bi, -1)
+    b0_ref[...] += jax.lax.dot_general(
+        xm, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    # same X tile, second consumer: contract only the last axis with A_{N-1}
+    bc_last = f_refs[-1].shape[0]
+    xr = x_ref[...].reshape(-1, bc_last)  # (bi*prod(bc[:-1]), bc_last)
+    p = jax.lax.dot_general(
+        xr, f_refs[-1][...], dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    p_ref[...] += p.reshape(p_ref.shape)
+
+
+def mttkrp_fused_pair_pallas(
+    x: jax.Array,
+    factors: Sequence[jax.Array],
+    *,
+    block_i: int,
+    block_contract: Sequence[int],
+    block_r: int,
+    interpret: bool = False,
+    acc_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Canonical fused pair: ``(B^(0), P = X x_{N-1} A_{N-1})`` from one
+    tensor pass. ``factors`` are the N-1 non-output factors in tensor-axis
+    order (axes 1..N-1). Pre-padded inputs required; both outputs are in
+    ``acc_dtype``."""
+    n = x.ndim
+    nc = n - 1
+    assert nc >= 2, "fused pair needs >= 2 contraction dims"
+    assert len(factors) == nc and len(block_contract) == nc
+    i_sz = x.shape[0]
+    r_sz = factors[0].shape[1]
+    for d, f in enumerate(factors):
+        assert f.shape == (x.shape[1 + d], r_sz)
+        assert x.shape[1 + d] % block_contract[d] == 0
+    assert i_sz % block_i == 0 and r_sz % block_r == 0
+
+    grid = (
+        r_sz // block_r,
+        i_sz // block_i,
+    ) + tuple(x.shape[1 + d] // block_contract[d] for d in range(nc))
+
+    def x_map(r, i, *cs):
+        return (i,) + cs
+
+    def f_map_for(d):
+        def f_map(r, i, *cs):
+            return (cs[d], r)
+        return f_map
+
+    def b0_map(r, i, *cs):
+        return (i, r)
+
+    def p_map(r, i, *cs):
+        return (i,) + cs[:-1] + (r,)
+
+    in_specs = [
+        pl.BlockSpec((block_i,) + tuple(block_contract), x_map)
+    ] + [
+        pl.BlockSpec((block_contract[d], block_r), f_map_for(d))
+        for d in range(nc)
+    ]
+    p_shape = (i_sz,) + tuple(x.shape[1 + d] for d in range(nc - 1)) + (r_sz,)
+    p_block = (block_i,) + tuple(block_contract[:-1]) + (block_r,)
+    kernel = functools.partial(
+        _fused_pair_kernel, n_contract=nc, acc_dtype=acc_dtype
+    )
+    kwargs = {}
+    cp = _compiler_params(nc)
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((block_i, block_r), b0_map),
+            pl.BlockSpec(p_block, p_map),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((i_sz, r_sz), acc_dtype),
+            jax.ShapeDtypeStruct(p_shape, acc_dtype),
+        ),
+        interpret=interpret,
+        **kwargs,
+    )(x, *factors)
+
+
+def fused_pair_canonical_pallas(
+    x: jax.Array,
+    fs: Sequence[jax.Array],
+    *,
+    plan=None,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Padding/un-padding wrapper around :func:`mttkrp_fused_pair_pallas`
+    (mirrors :func:`repro.kernels.ops.mttkrp_canonical_pallas`).
+
+    ``x`` already has the output mode at axis 0; ``fs`` are the N-1
+    factors for axes 1..N-1 in order. Returns ``(b0, p)`` un-padded, with
+    ``p`` of shape ``(I_0, I_1..I_{N-2}, R)``.
+    """
+    from .ops import _auto_interpret, _round_up  # local: shared idiom
+
+    interpret = _auto_interpret() if interpret is None else interpret
+    rank = fs[0].shape[1]
+    orig_shape = x.shape
+    if plan is None:
+        from ..engine.plan import choose_sweep_blocks
+
+        plan = choose_sweep_blocks(x.shape, rank, x.dtype.itemsize)
+    tgt = plan.padded_shape(x.shape)
+    r_pad = _round_up(rank, plan.block_r)
+    x = jnp.pad(x, [(0, t - s) for t, s in zip(tgt, x.shape)])
+    fs = [
+        jnp.pad(f, ((0, tgt[1 + d] - f.shape[0]), (0, r_pad - rank)))
+        for d, f in enumerate(fs)
+    ]
+    b0, p = mttkrp_fused_pair_pallas(
+        x, fs,
+        block_i=plan.block_i,
+        block_contract=plan.block_contract,
+        block_r=plan.block_r,
+        interpret=interpret,
+    )
+    b0 = b0[:orig_shape[0], :rank]
+    p = p[
+        tuple(slice(0, s) for s in orig_shape[:-1]) + (slice(0, rank),)
+    ]
+    if out_dtype is not None:
+        return b0.astype(out_dtype), p.astype(out_dtype)
+    return b0, p

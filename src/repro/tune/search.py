@@ -437,7 +437,7 @@ def tune_mttkrp(
         memory = memory if memory is not None else ctx.memory
         interpret = interpret if interpret is not None else ctx.interpret
         cache = cache if cache is not None else ctx.plan_cache()
-    cache = cache or default_cache()
+    cache = cache if cache is not None else default_cache()
     mem = memory or Memory.tpu_vmem(itemsize=x.dtype.itemsize)
     perm_shape = (x.shape[mode],) + tuple(
         s for k, s in enumerate(x.shape) if k != mode
@@ -520,7 +520,7 @@ def tune_partial(
         interpret = interpret if interpret is not None else ctx.interpret
         cache = cache if cache is not None else ctx.plan_cache()
     metric = _resolve_metric(metric)
-    cache = cache or default_cache()
+    cache = cache if cache is not None else default_cache()
     mem = memory or Memory.tpu_vmem(itemsize=node.dtype.itemsize)
     modes = tuple(modes)
     drop = tuple(drop)
@@ -691,7 +691,7 @@ def tune_multi_ttm(
         interpret = interpret if interpret is not None else ctx.interpret
         cache = cache if cache is not None else ctx.plan_cache()
     metric = _resolve_metric(metric)
-    cache = cache or default_cache()
+    cache = cache if cache is not None else default_cache()
     mem = memory or Memory.tpu_vmem(itemsize=x.dtype.itemsize)
     keep_key = -1 if keep is None else keep
     lead = 0 if keep is None else keep
@@ -829,7 +829,7 @@ def resolve(
     itemsize = jnp.dtype(dtype).itemsize
     mem = memory or Memory.tpu_vmem(itemsize=itemsize)
     key = cache_key(shape, rank, mode, dtype, mem, kind=kind)
-    cache = cache or default_cache()
+    cache = cache if cache is not None else default_cache()
     entry = cache.get(key)
     if entry is not None:
         return Resolved(
@@ -867,7 +867,7 @@ def resolve_multi_ttm(
     key = cache_key(
         canon_shape, tuple(ranks), keep_key, dtype, mem, kind="multi_ttm"
     )
-    cache = cache or default_cache()
+    cache = cache if cache is not None else default_cache()
     entry = cache.get(key)
     if entry is not None:
         return Resolved(
@@ -881,3 +881,192 @@ def resolve_multi_ttm(
         )
         return Resolved("pallas", plan, None, None, False, key)
     return Resolved("einsum", None, None, None, False, key)
+
+
+# ---------------------------------------------------------------------------
+# Sweep schedule (kind="sweep" cache entries; core.cp_als sweep="auto")
+# ---------------------------------------------------------------------------
+
+def _sweep_pass_bytes(shape: Sequence[int], rank: int, itemsize: int,
+                      schedule: str) -> int:
+    """Modeled streaming traffic of one ALS sweep's MTTKRP chain.
+
+    ``per_mode`` re-reads the tensor once per mode (N passes).  ``fused``
+    reads it twice (P' + the final full MTTKRP) and instead streams the
+    rank-augmented partial ``P'`` once to write it and once per middle
+    mode to contract it — the arXiv:1708.08976 mode-reuse trade."""
+    n = len(shape)
+    x_words = math.prod(shape)
+    if schedule == "per_mode":
+        return n * x_words * itemsize
+    p_words = math.prod(shape[:-1]) * rank
+    # 2 tensor passes + P' written once + P' read for B0 and each middle mode
+    return (2 * x_words + p_words * (n - 1)) * itemsize
+
+
+def tune_sweep(
+    x: jax.Array,
+    rank: int,
+    *,
+    ctx: ExecutionContext | None = None,
+    factors: Sequence[jax.Array] | None = None,
+    memory: Memory | None = None,
+    cache: PlanCache | None = None,
+    metric: str = "auto",
+    interpret: bool | None = None,
+    force: bool = False,
+    persist: bool = True,
+    warmup: int = 1,
+    reps: int = 3,
+    rtol: float = 5e-3,
+) -> TuneResult:
+    """Measure one ALS sweep's MTTKRP chain under the fused (mode-reuse)
+    vs the per-mode schedule, persist the winner (``kind="sweep"`` cache
+    entries — what ``cp_als(sweep="auto")`` resolves against).
+
+    The chain runs with *fixed* factors, under which every fused-schedule
+    B equals the corresponding full MTTKRP — so the fused candidate is
+    verified against the per-mode chain, and the timing compares exactly
+    the work the schedule changes (the Gram/solve/normalize part is
+    identical either way). ``metric="walltime"`` times both chains;
+    ``metric="traffic"`` (the CPU default) ranks by the modeled pass
+    bytes (:func:`_sweep_pass_bytes`). Idempotent like
+    :func:`tune_mttkrp`.
+    """
+    from dataclasses import replace as dc_replace
+
+    from ..engine import execute as engine_execute  # call-time: layer cycle
+    from ..engine.sweep import fused_als_sweep
+
+    if ctx is not None:
+        memory = memory if memory is not None else ctx.memory
+        interpret = interpret if interpret is not None else ctx.interpret
+        cache = cache if cache is not None else ctx.plan_cache()
+    metric = _resolve_metric(metric)
+    cache = cache if cache is not None else default_cache()
+    mem = memory or Memory.tpu_vmem(itemsize=x.dtype.itemsize)
+    key = cache_key(x.shape, rank, -1, x.dtype, mem, kind="sweep")
+    if not force:
+        entry = cache.get(key)
+        if entry is not None:
+            winner = Candidate(entry.backend, variant=entry.variant)
+            best = Measurement(
+                winner, walltime_us=entry.walltime_us,
+                modeled_bytes=entry.modeled_bytes, score=entry.score,
+            )
+            return TuneResult(
+                key, winner, [best], entry.metric, cache_hit=True
+            )
+
+    if factors is None:
+        ks = jax.random.split(jax.random.PRNGKey(0), x.ndim)
+        factors = [
+            jax.random.normal(k, (s, rank), x.dtype)
+            for k, s in zip(ks, x.shape)
+        ]
+    factors = list(factors)
+    if ctx is None:
+        measure_ctx = ExecutionContext.create(
+            backend="auto", interpret=interpret,
+        )
+    else:
+        # the chains replay the already-cached per-contraction decisions;
+        # tune=False stops the per-mode searches from re-entering here
+        measure_ctx = dc_replace(ctx.local(), tune=False)
+    n = x.ndim
+
+    def per_mode_chain():
+        return [
+            engine_execute.mttkrp(x, factors, m, ctx=measure_ctx)
+            for m in range(n)
+        ]
+
+    def fused_chain():
+        out: list[jax.Array] = []
+
+        def keep(mode, b):
+            out.append(b)
+            return factors[mode]
+
+        fs = list(factors)
+        fused_als_sweep(x, fs, keep, ctx=measure_ctx)
+        return out
+
+    backend_tag = ctx.backend if ctx is not None else "auto"
+    cands = {
+        "per_mode": (Candidate(backend_tag, variant="per_mode"),
+                     per_mode_chain),
+        "fused": (Candidate(backend_tag, variant="fused"), fused_chain),
+    }
+    reference = per_mode_chain()
+    jax.block_until_ready(reference)
+    measurements: list[Measurement] = []
+    for schedule, (cand, chain) in cands.items():
+        modeled = _sweep_pass_bytes(
+            x.shape, rank, x.dtype.itemsize, schedule
+        )
+        m = Measurement(cand, modeled_bytes=modeled)
+        try:
+            got = chain()
+            jax.block_until_ready(got)
+            for g, r in zip(got, reference):
+                err = float(jnp.max(jnp.abs(g - r)))
+                scale = float(jnp.max(jnp.abs(r))) + 1e-30
+                if not math.isfinite(err) or err > rtol * scale:
+                    raise AssertionError(
+                        f"maxerr={err:.3e} (scale {scale:.3e})"
+                    )
+            if metric == "walltime":
+                m.walltime_us = _time_call(chain, warmup, reps)
+                m.score = m.walltime_us
+            else:
+                m.score = float(modeled)
+        except Exception as e:  # noqa: BLE001 - a failing schedule loses
+            m.ok = False
+            m.error = f"{type(e).__name__}: {e}"
+        measurements.append(m)
+    ok = [m for m in measurements if m.ok and math.isfinite(m.score)]
+    if not ok:
+        raise RuntimeError(f"no sweep schedule survived measurement for {key}")
+    winner = min(ok, key=lambda m: m.score)
+    cache.put(
+        key,
+        CacheEntry(
+            backend=backend_tag,
+            variant=winner.candidate.variant,
+            metric=metric,
+            score=winner.score,
+            walltime_us=winner.walltime_us,
+            modeled_bytes=winner.modeled_bytes,
+            meta={"candidates": len(measurements)},
+        ),
+        persist=persist,
+    )
+    return TuneResult(key, winner.candidate, measurements, metric)
+
+
+def resolve_sweep(
+    shape: Sequence[int],
+    rank: int,
+    dtype,
+    memory: Memory | None = None,
+    *,
+    cache: PlanCache | None = None,
+) -> Resolved:
+    """``sweep="auto"`` resolution: cache hit → the tuned schedule
+    (``variant`` is ``"fused"`` or ``"per_mode"``); miss → ``"fused"``
+    for 3-way-and-up tensors (2 tensor passes strictly beat N in the
+    pass model), ``"per_mode"`` below that (nothing to reuse). Pure
+    Python over static shapes — trace-safe."""
+    itemsize = jnp.dtype(dtype).itemsize
+    mem = memory or Memory.tpu_vmem(itemsize=itemsize)
+    key = cache_key(shape, rank, -1, dtype, mem, kind="sweep")
+    cache = cache if cache is not None else default_cache()
+    entry = cache.get(key)
+    if entry is not None:
+        return Resolved(
+            entry.backend, entry.to_plan(), entry.variant, entry.block,
+            True, key,
+        )
+    variant = "fused" if len(shape) >= 3 else "per_mode"
+    return Resolved("auto", None, variant, None, False, key)

@@ -333,6 +333,66 @@ def check_cp_sweep_comm_beats_independent():
     print("PASS cp_sweep_comm_beats_independent")
 
 
+def check_ring_overlap_sweep():
+    """overlap="ring": the sweep's per-factor all-gather/reduce-scatter
+    become ppermute rings with chunked MTTKRP consumption — numerics match
+    the monolithic-collective sweep, every factor collective is a
+    collective-permute, and HLO-measured bytes equal the SAME
+    stationary_sweep_words model exactly (the 2-collectives-per-factor
+    traffic is preserved byte-for-byte)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.tensor import frob_norm
+    from repro.engine.context import ExecutionContext
+
+    dims, rank = (32, 32, 32), 4
+    x = random_tensor(jax.random.PRNGKey(60), dims)
+    fs = random_factors(jax.random.PRNGKey(61), dims, rank)
+    for grid in ((2, 2, 2), (1, 2, 2)):
+        procs = 1
+        for g in grid:
+            procs *= g
+        ctx_ring = ExecutionContext.create(grid=grid, overlap="ring")
+        # numerics: ring sweep == plain sweep (fp reordering tolerance)
+        r_none = cp_als_parallel(x, rank, n_iters=4, init_factors=fs,
+                                 grid=grid)
+        r_ring = cp_als_parallel(x, rank, n_iters=4, init_factors=fs,
+                                 ctx=ctx_ring)
+        for k in range(3):
+            np.testing.assert_allclose(
+                np.asarray(r_ring.factors[k]), np.asarray(r_none.factors[k]),
+                rtol=1e-3, atol=1e-4,
+            )
+        np.testing.assert_allclose(
+            np.asarray(r_ring.weights), np.asarray(r_none.weights),
+            rtol=1e-3, atol=1e-4,
+        )
+        for fp, fn_ in zip(r_ring.fits, r_none.fits):
+            assert abs(fp - fn_) < 1e-3, (r_ring.fits, r_none.fits)
+        # bytes: the ring spelling moves exactly the modeled words
+        mesh = make_grid_mesh(grid, dims=dims, rank=rank)
+        sweep = build_cp_sweep(mesh, 3, ctx=ctx_ring)
+        xs, f_sh, blocks, grams = place_cp_state(mesh, x, fs)
+        normx = jax.device_put(frob_norm(x), NamedSharding(mesh, P()))
+        summ = parse_collectives(
+            sweep.lower(xs, f_sh, blocks, grams, normx).compile().as_text()
+        )
+        predicted = stationary_sweep_words(dims, rank, grid) * 4 + int(
+            2 * (procs - 1) / procs * 4
+        )
+        assert summ.ring_bytes == predicted, (
+            grid, summ.ring_bytes, predicted
+        )
+        # every factor collective is now a ppermute hop; only the R x R
+        # Gram / scalar fit all-reduces remain monolithic
+        kinds = summ.by_kind()
+        assert "all-gather" not in kinds and "reduce-scatter" not in kinds, (
+            grid, kinds
+        )
+        assert kinds.get("collective-permute", {}).get("count", 0) > 0, kinds
+    print("PASS ring_overlap_sweep")
+
+
 def check_cp_auto_grid_driver():
     """cp_als(distributed=True): automatic Eq (12)-sweep-optimal grid
     selection end-to-end through the core driver entry."""
@@ -566,6 +626,7 @@ CHECKS = [
     check_alg3_pallas_local,
     check_cp_sweep_matches_sequential,
     check_cp_sweep_comm_beats_independent,
+    check_ring_overlap_sweep,
     check_cp_auto_grid_driver,
     check_cp_sweep_pallas_local,
     check_context_roundtrip_reproduces_sweep,

@@ -58,6 +58,7 @@ def dist_transcript():
         "alg_pallas_local",
         "cp_sweep_matches_sequential",
         "cp_sweep_comm_beats_independent",
+        "ring_overlap_sweep",
         "cp_auto_grid_driver",
         "cp_sweep_pallas_local",
         "context_roundtrip_reproduces_sweep",

@@ -1,0 +1,190 @@
+"""The mixed-precision policy: ``compute_dtype`` casting with fp32
+accumulation across all three backends, dtype-aware planning, and the
+ExecutionContext serialization of the new knobs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cp_als import cp_als
+from repro.core.tensor import random_low_rank_tensor
+from repro.engine import Memory, mttkrp
+from repro.engine.context import Distribution, ExecutionContext
+from repro.engine.execute import contract_partial, multi_ttm
+from repro.engine.plan import choose_blocks, choose_sweep_blocks
+
+BACKENDS = ["einsum", "blocked_host", "pallas"]
+
+
+def _mk(dims, rank, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, *kf = jax.random.split(key, len(dims) + 1)
+    x = jax.random.normal(kx, dims, jnp.float32)
+    fs = [jax.random.normal(k, (d, rank), jnp.float32)
+          for k, d in zip(kf, dims)]
+    return x, fs
+
+
+# ---------------------------------------------------------------------------
+# mttkrp under compute_dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mttkrp_bf16_policy(backend):
+    """bf16 inputs, fp32 accumulation, output back in the input dtype."""
+    dims, rank = (24, 16, 16), 8
+    x, fs = _mk(dims, rank, seed=1)
+    ref = mttkrp(x, fs, 1, ctx=ExecutionContext.create(backend="einsum"))
+    ctx = ExecutionContext.create(
+        backend=backend, interpret=True, compute_dtype="bfloat16"
+    )
+    out = mttkrp(x, fs, 1, ctx=ctx)
+    assert out.dtype == jnp.float32  # transparent policy: caller dtype out
+    rel = float(
+        jnp.linalg.norm(out - ref) / (jnp.linalg.norm(ref) + 1e-30)
+    )
+    assert rel < 2e-2, (backend, rel)
+
+
+def test_mttkrp_compute_dtype_explicit_out_dtype():
+    """An explicit out_dtype still wins over the transparent default."""
+    dims, rank = (16, 12, 8), 4
+    x, fs = _mk(dims, rank, seed=2)
+    ctx = ExecutionContext.create(
+        backend="einsum", compute_dtype="bfloat16", out_dtype="bfloat16"
+    )
+    out = mttkrp(x, fs, 0, ctx=ctx)
+    assert out.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("backend", ["einsum", "pallas"])
+def test_contract_partial_bf16_policy(backend):
+    dims, rank = (16, 12, 10), 4
+    x, fs = _mk(dims, rank, seed=3)
+    ctx32 = ExecutionContext.create(backend="einsum")
+    ref = contract_partial(x, fs, (0, 1, 2), (2,), False, ctx=ctx32)
+    ctx = ExecutionContext.create(
+        backend=backend, interpret=True, compute_dtype="bfloat16"
+    )
+    out = contract_partial(x, fs, (0, 1, 2), (2,), False, ctx=ctx)
+    assert out.dtype == jnp.float32
+    rel = float(
+        jnp.linalg.norm(out - ref) / (jnp.linalg.norm(ref) + 1e-30)
+    )
+    assert rel < 2e-2, (backend, rel)
+
+
+@pytest.mark.parametrize("backend", ["einsum", "pallas"])
+def test_multi_ttm_bf16_policy(backend):
+    dims, ranks = (16, 12, 10), (4, 3, 2)
+    x, _ = _mk(dims, 4, seed=4)
+    mats = [
+        jax.random.normal(jax.random.PRNGKey(40 + k), (d, r), jnp.float32)
+        for k, (d, r) in enumerate(zip(dims, ranks))
+    ]
+    ref = multi_ttm(x, mats, None, ctx=ExecutionContext.create(
+        backend="einsum"))
+    ctx = ExecutionContext.create(
+        backend=backend, interpret=True, compute_dtype="bfloat16"
+    )
+    out = multi_ttm(x, mats, None, ctx=ctx)
+    assert out.dtype == jnp.float32
+    rel = float(
+        jnp.linalg.norm(out - ref) / (jnp.linalg.norm(ref) + 1e-30)
+    )
+    assert rel < 3e-2, (backend, rel)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: CP-ALS under the policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sweep", ["per_mode", "fused"])
+def test_cp_als_bf16_converges(sweep):
+    dims, rank = (16, 14, 12), 3
+    x, _ = random_low_rank_tensor(jax.random.PRNGKey(5), dims, rank)
+    ctx = ExecutionContext.create(compute_dtype="bfloat16")
+    res = cp_als(x, rank, n_iters=12, key=jax.random.PRNGKey(6),
+                 sweep=sweep, ctx=ctx)
+    # bf16 MTTKRPs with fp32 Gram/solve still converge; the fit plateau
+    # reflects bf16's ~3 significant digits, not a policy bug
+    assert res.final_fit > 0.93, res.fits
+    assert res.final_fit > res.fits[0] + 0.3
+    for f in res.factors:
+        assert f.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware planning
+# ---------------------------------------------------------------------------
+
+def test_memory_with_itemsize():
+    mem = Memory.tpu_vmem(itemsize=4)
+    half = mem.with_itemsize(2)
+    assert half.itemsize == 2
+    assert half.budget_bytes == mem.budget_bytes
+    assert half.lane == mem.lane and half.sublane == mem.sublane
+    assert mem.with_itemsize(4) is mem  # no-op returns the same object
+
+
+def test_narrow_itemsize_admits_wider_blocks():
+    """Same byte budget, 2-byte elements: the planner may hold at least
+    as many words resident — blocks never shrink, and for a VMEM-bound
+    problem they grow."""
+    shape, rank = (256, 256, 256), 64
+    mem4 = Memory(budget_bytes=1 << 17, itemsize=4)
+    mem2 = mem4.with_itemsize(2)
+    p4 = choose_blocks(shape, rank, 4, memory=mem4)
+    p2 = choose_blocks(shape, rank, 2, memory=mem2)
+    words4 = p4.working_set_words()
+    words2 = p2.working_set_words()
+    assert words2 >= words4
+    s4 = choose_sweep_blocks(shape, rank, 4, memory=mem4)
+    s2 = choose_sweep_blocks(shape, rank, 2, memory=mem2)
+    from repro.engine.plan import fused_pair_working_set_words
+
+    assert fused_pair_working_set_words(s2) >= fused_pair_working_set_words(
+        s4
+    )
+
+
+# ---------------------------------------------------------------------------
+# context knobs: validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_compute_dtype_validation():
+    ctx = ExecutionContext.create(compute_dtype="bfloat16")
+    assert ctx.compute_dtype == "bfloat16"
+    ctx16 = ExecutionContext.create(compute_dtype=jnp.float16)
+    assert ctx16.compute_dtype == "float16"
+    with pytest.raises(ValueError, match="compute_dtype"):
+        ExecutionContext.create(compute_dtype="int32")
+    with pytest.raises(ValueError, match="compute_dtype"):
+        ExecutionContext.create(compute_dtype="not-a-dtype")
+
+
+def test_overlap_validation():
+    d = Distribution(overlap="ring")
+    assert d.overlap == "ring"
+    with pytest.raises(ValueError, match="overlap"):
+        Distribution(overlap="bogus")
+
+
+def test_context_roundtrip_compute_dtype_and_overlap():
+    ctx = ExecutionContext.create(
+        backend="einsum",
+        compute_dtype="bfloat16",
+        grid=(1, 2, 2),
+        overlap="ring",
+    )
+    ctx2 = ExecutionContext.from_json(ctx.to_json())
+    assert ctx2 == ctx and hash(ctx2) == hash(ctx)
+    assert ctx2.compute_dtype == "bfloat16"
+    assert ctx2.distribution.overlap == "ring"
+    assert ctx2.distribution.grid == (1, 2, 2)
+    # defaults stay default through the round-trip
+    plain = ExecutionContext.create(backend="einsum")
+    plain2 = ExecutionContext.from_json(plain.to_json())
+    assert plain2.compute_dtype is None
+    assert plain2 == plain

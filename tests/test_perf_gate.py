@@ -1,0 +1,145 @@
+"""The perf-trajectory gate: comparison logic and the committed
+BENCH_*.json history itself."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from benchmarks.perf_gate import compare_bench, load_bench, main
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _row(name, us, derived=""):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def _bench(tmp_path, fname, rows):
+    path = tmp_path / fname
+    path.write_text(json.dumps({"schema": 1, "results": rows}))
+    return str(path)
+
+
+def test_gate_passes_within_threshold():
+    old = {"a": _row("a", 100.0), "b": _row("b", 50.0)}
+    new = {"a": _row("a", 140.0), "b": _row("b", 30.0)}
+    assert compare_bench(old, new, threshold=0.5) == []
+
+
+def test_gate_flags_regression_beyond_threshold():
+    old = {"a": _row("a", 100.0)}
+    new = {"a": _row("a", 151.0)}
+    vio = compare_bench(old, new, threshold=0.5)
+    assert len(vio) == 1 and "a:" in vio[0] and "1.51x" in vio[0]
+
+
+def test_gate_threshold_boundary_is_exclusive():
+    old = {"a": _row("a", 100.0)}
+    new = {"a": _row("a", 150.0)}  # exactly 1.5x with threshold 0.5: pass
+    assert compare_bench(old, new, threshold=0.5) == []
+
+
+def test_gate_ignores_non_matching_rows():
+    """Benchmarks come and go; only continuing rows are gated."""
+    old = {"gone": _row("gone", 1.0)}
+    new = {"fresh": _row("fresh", 1e9)}
+    assert compare_bench(old, new, threshold=0.5) == []
+
+
+def test_gate_flags_error_rows_in_new():
+    old = {}
+    new = {"mod[ERROR]": _row("mod[ERROR]", 0.0, "boom")}
+    vio = compare_bench(old, new, threshold=0.5)
+    assert len(vio) == 1 and "errored" in vio[0] and "boom" in vio[0]
+
+
+def test_gate_skips_zero_baseline():
+    """Derived-only rows report 0 us_per_call; no baseline to regress."""
+    old = {"tune_cache[entries]": _row("tune_cache[entries]", 0.0)}
+    new = {"tune_cache[entries]": _row("tune_cache[entries]", 0.0)}
+    assert compare_bench(old, new, threshold=0.5) == []
+
+
+def test_gate_fused_speedup_floor():
+    new = {
+        "cp_als_sweep[48x48x48,R8]": _row(
+            "cp_als_sweep[48x48x48,R8]", 100.0,
+            "backend=einsum;fused_speedup=1.21x;fit_fused=0.99",
+        ),
+        "cp_als_sweep[96x96x96,R16]": _row(
+            "cp_als_sweep[96x96x96,R16]", 100.0,
+            "backend=einsum;fused_speedup=0.85x;fit_fused=0.99",
+        ),
+    }
+    vio = compare_bench({}, new, min_fused_speedup=1.0)
+    assert len(vio) == 1
+    assert "96x96x96" in vio[0] and "0.85x" in vio[0]
+
+
+def test_gate_require_fused_win():
+    """--require-fused-win: at least one sweep row must beat 1x."""
+    def sweep(name, s):
+        return _row(name, 100.0, f"backend=einsum;fused_speedup={s}x")
+
+    parity = {
+        "cp_als_sweep[a]": sweep("cp_als_sweep[a]", "0.97"),
+        "cp_als_sweep[b]": sweep("cp_als_sweep[b]", "0.95"),
+    }
+    vio = compare_bench({}, parity, min_fused_speedup=0.9,
+                        require_fused_win=True)
+    assert len(vio) == 1 and "no cp_als_sweep row beats" in vio[0]
+    winning = dict(parity)
+    winning["cp_als_sweep[c]"] = sweep("cp_als_sweep[c]", "1.21")
+    assert compare_bench({}, winning, min_fused_speedup=0.9,
+                         require_fused_win=True) == []
+
+
+def test_gate_fused_speedup_requires_rows_and_field():
+    vio = compare_bench({}, {}, min_fused_speedup=1.0)
+    assert len(vio) == 1 and "unrecorded" in vio[0]
+    new = {"cp_als_sweep[a]": _row("cp_als_sweep[a]", 1.0, "no field")}
+    vio = compare_bench({}, new, min_fused_speedup=1.0)
+    assert len(vio) == 1 and "lacks fused_speedup" in vio[0]
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    old = _bench(tmp_path, "old.json", [_row("a", 100.0)])
+    good = _bench(tmp_path, "good.json", [_row("a", 110.0)])
+    bad = _bench(tmp_path, "bad.json", [_row("a", 1000.0)])
+    assert main([old, good]) == 0
+    assert "OK" in capsys.readouterr().out
+    assert main([old, bad]) == 1
+    assert "PERF REGRESSION" in capsys.readouterr().err
+    assert main([old, str(tmp_path / "missing.json")]) == 2
+
+
+def test_load_bench_roundtrip(tmp_path):
+    path = _bench(tmp_path, "b.json", [_row("x", 1.5, "d=1")])
+    loaded = load_bench(path)
+    assert loaded["x"]["us_per_call"] == 1.5
+
+
+def test_committed_bench_history_gates_clean():
+    """The two newest committed BENCH files must pass the gate — the same
+    invariant CI enforces."""
+    files = sorted(glob.glob(os.path.join(_REPO, "BENCH_*.json")))
+    if len(files) < 2:
+        pytest.skip("need two committed BENCH files")
+    old, new = files[-2], files[-1]
+    vio = compare_bench(load_bench(old), load_bench(new), threshold=0.5)
+    assert vio == [], vio
+
+
+def test_newest_committed_bench_has_fused_win():
+    """The fused-sweep success metric is recorded in the newest committed
+    BENCH file: every row within noise of parity, at least one a win —
+    the same invariant CI's perf gate enforces."""
+    files = sorted(glob.glob(os.path.join(_REPO, "BENCH_*.json")))
+    newest = load_bench(files[-1])
+    if not any(n.startswith("cp_als_sweep[") for n in newest):
+        pytest.skip("newest BENCH predates the fused-sweep rows")
+    vio = compare_bench({}, newest, min_fused_speedup=0.9,
+                        require_fused_win=True)
+    assert vio == [], vio
