@@ -19,6 +19,11 @@ catches the fused path becoming genuinely slower).
 one sweep row must beat 1x (the mode-reuse schedule keeps beating the
 per-mode dispatch it replaced somewhere).
 
+``--traffic-threshold`` gates the observability columns too: rows
+stamped with a ``trace`` summary (``benchmarks.run`` runs every module
+under a :class:`repro.observe.Trace`) must not grow their modeled Eq-10
+words or worsen their measured/modeled optimality ratio beyond it.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.perf_gate OLD.json NEW.json \\
         [--threshold 0.5] [--min-fused-speedup 0.9] [--require-fused-win]
@@ -46,6 +51,38 @@ def load_bench(path: str) -> dict[str, dict]:
     if not isinstance(rows, list):
         raise ValueError(f"{path}: 'results' is not a list")
     return {r["name"]: r for r in rows if isinstance(r, dict) and "name" in r}
+
+
+def compare_traffic(
+    old: dict[str, dict],
+    new: dict[str, dict],
+    *,
+    traffic_threshold: float = 0.25,
+) -> list[str]:
+    """Gate the observability columns: rows in BOTH files carrying a
+    ``trace`` summary (stamped by ``benchmarks.run``) must not grow their
+    modeled Eq-10 words — or worsen their measured/modeled optimality
+    ratio — by more than ``traffic_threshold`` (relative).  The traffic
+    model is deterministic, so this tolerance is for benign plan changes,
+    not machine noise; rows lacking a trace on either side are skipped
+    (pre-observability baselines stay comparable)."""
+    violations: list[str] = []
+    for name in sorted(set(old) & set(new)):
+        t_old, t_new = old[name].get("trace"), new[name].get("trace")
+        if not isinstance(t_old, dict) or not isinstance(t_new, dict):
+            continue
+        for field in ("modeled_words", "optimality_ratio"):
+            v_old, v_new = t_old.get(field), t_new.get(field)
+            if not v_old or v_new is None:
+                continue  # no baseline (or measured side) to regress
+            ratio = float(v_new) / float(v_old)
+            if ratio > 1.0 + traffic_threshold:
+                violations.append(
+                    f"{name}: {field} {float(v_new):.1f} vs "
+                    f"{float(v_old):.1f} baseline ({ratio:.2f}x > "
+                    f"{1.0 + traffic_threshold:.2f}x allowed)"
+                )
+    return violations
 
 
 def compare_bench(
@@ -120,6 +157,10 @@ def main(argv: list[str] | None = None) -> int:
                          "rows")
     ap.add_argument("--require-fused-win", action="store_true",
                     help="at least one cp_als_sweep row must beat 1x")
+    ap.add_argument("--traffic-threshold", type=float, default=None,
+                    help="also gate the stamped trace summaries: relative "
+                         "growth allowed in modeled words / optimality "
+                         "ratio for rows traced in both files")
     args = ap.parse_args(argv)
     try:
         old = load_bench(args.old)
@@ -132,6 +173,10 @@ def main(argv: list[str] | None = None) -> int:
         min_fused_speedup=args.min_fused_speedup,
         require_fused_win=args.require_fused_win,
     )
+    if args.traffic_threshold is not None:
+        violations += compare_traffic(
+            old, new, traffic_threshold=args.traffic_threshold
+        )
     common = len(set(old) & set(new))
     if violations:
         for v in violations:

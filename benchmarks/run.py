@@ -46,7 +46,17 @@ JSON_SCHEMA_VERSION = 1
 
 def collect(want: set[str]) -> list[dict]:
     """Run the selected modules, returning structured rows (errors become
-    rows too — a failing table must not kill the harness)."""
+    rows too — a failing table must not kill the harness).
+
+    Each module runs under an in-memory :class:`repro.observe.Trace`
+    (``capture="all"``: the harness itself is the opt-in), and every row
+    it produced is stamped with that module's trace summary — modeled
+    Eq-10 words, measured bytes where a collective sweep or bounds audit
+    recorded one, and the resulting optimality ratio — so a BENCH row
+    carries its traffic story next to its wall time.
+    """
+    from repro.observe import Trace, summarize_events
+
     rows: list[dict] = []
     for modname in MODULES:
         if modname not in want:
@@ -54,10 +64,15 @@ def collect(want: set[str]) -> list[dict]:
         try:  # import inside: a module broken at import time is one
             # [ERROR] row, not a dead harness
             mod = __import__(f"benchmarks.{modname}", fromlist=["rows"])
-            for name, us, derived in mod.rows():
-                rows.append(
+            with Trace() as tr:
+                mod_rows = [
                     {"name": name, "us_per_call": us, "derived": str(derived)}
-                )
+                    for name, us, derived in mod.rows()
+                ]
+            summary = summarize_events(tr.events)
+            for row in mod_rows:
+                row["trace"] = summary
+            rows.extend(mod_rows)
         except Exception as e:
             rows.append(
                 {

@@ -34,8 +34,9 @@ from .engine.plan import BlockPlan, Memory, MultiTTMPlan
 from .core.cp_als import CPResult, cp_als, cp_gradient
 from .core.tucker import TuckerResult, tucker_hooi
 from .distributed.grid_select import select_grid, select_tucker_grid
+from .observe.trace import Trace
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     "ExecutionContext",
@@ -53,4 +54,5 @@ __all__ = [
     "TuckerResult",
     "select_grid",
     "select_tucker_grid",
+    "Trace",
 ]

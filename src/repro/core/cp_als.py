@@ -231,6 +231,8 @@ def cp_als(
             x.shape, rank, x.dtype, ctx.memory, cache=ctx.plan_cache()
         ).variant
 
+    from ..observe import trace as _otrace
+
     for it in range(n_iters):
         if schedule == "dimtree":
             dimtree_als_sweep(x, factors, update, ctx=ctx)
@@ -243,7 +245,23 @@ def cp_als(
         b_last, a_last = state["b_last"], state["a_last"]
         fit = float(_fit(normx, b_last, a_last, gram_full))
         fits.append(fit)
-        if tol and it > 0 and abs(fits[-1] - fits[-2]) < tol:
+        delta = abs(fits[-1] - fits[-2]) if it > 0 else None
+        converged = bool(tol and it > 0 and delta < tol)
+        # float(_fit) above forces concreteness, so this loop never runs
+        # under a jax trace — no tracer guard needed here.
+        if _otrace.should_record(ctx.observe):
+            _otrace.record_event(
+                "cp_als_iter",
+                shape=list(x.shape),
+                rank=int(rank),
+                schedule=schedule,
+                it=it,
+                fit=fit,
+                fit_delta=delta,
+                weights=[float(w) for w in weights],
+                converged=converged,
+            )
+        if converged:
             break
     # Kruskal form: factors stay column-normalized, λ is returned ONLY in
     # CPResult.weights.  (It used to be folded into the last-updated factor

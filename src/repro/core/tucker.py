@@ -176,6 +176,8 @@ def tucker_hooi(
             float(1.0 - jnp.sqrt(err_sq) / jnp.maximum(normx, 1e-30))
         )
         return TuckerResult(core, factors, fits)
+    from ..observe import trace as _otrace
+
     for it in range(n_iters):
         for k in range(n):
             y = engine_execute.multi_ttm(x, factors, keep=k, ctx=ctx)
@@ -187,6 +189,19 @@ def tucker_hooi(
         err_sq = jnp.maximum(normx**2 - frob_norm(core) ** 2, 0.0)
         fit = float(1.0 - jnp.sqrt(err_sq) / jnp.maximum(normx, 1e-30))
         fits.append(fit)
-        if tol and it > 0 and abs(fits[-1] - fits[-2]) < tol:
+        delta = abs(fits[-1] - fits[-2]) if it > 0 else None
+        converged = bool(tol and it > 0 and delta < tol)
+        # float(...) above forces concreteness: never inside a jax trace.
+        if _otrace.should_record(ctx.observe):
+            _otrace.record_event(
+                "tucker_iter",
+                shape=list(x.shape),
+                ranks=list(ranks),
+                it=it,
+                fit=fit,
+                fit_delta=delta,
+                converged=converged,
+            )
+        if converged:
             break
     return TuckerResult(core, factors, fits)

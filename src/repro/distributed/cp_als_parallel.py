@@ -396,6 +396,46 @@ def cp_als_parallel(
     xs, fs, blocks, grams = place_cp_state(mesh, x, factors)
     normx_dev = jax.device_put(normx, NamedSharding(mesh, P()))
 
+    from ..observe import trace as _otrace
+
+    if _otrace.should_record(ctx.observe):
+        # Driver level (outside the shard_map program): lower the sweep
+        # once more and walk its HLO for the actual collective bytes, so
+        # the trace carries a measured/modeled pair per the §V-C3 model.
+        from ..observe.metrics import SWEEP_COLLECTIVE_BYTES, registry
+        from .grid_select import stationary_sweep_words
+        from .hlo import parse_collectives
+
+        nproc = int(np.prod(grid))
+        text = (
+            sweep.lower(xs, fs, blocks, grams, normx_dev)
+            .compile().as_text()
+        )
+        summ = parse_collectives(text)
+        itemsize = int(x.dtype.itemsize)
+        modeled = int(stationary_sweep_words(x.shape, rank, grid))
+        fit_term = (
+            int(2 * (nproc - 1) / nproc * itemsize)
+            if (compute_fit or tol > 0) else 0
+        )
+        registry().observe(SWEEP_COLLECTIVE_BYTES, float(summ.ring_bytes))
+        _otrace.record_event(
+            "cp_sweep_collectives",
+            shape=list(x.shape),
+            rank=int(rank),
+            grid=list(grid),
+            procs=nproc,
+            itemsize=itemsize,
+            overlap=ctx.distribution.overlap,
+            measured_collective_bytes=int(summ.ring_bytes),
+            modeled_words=modeled,
+            modeled_bytes=modeled * itemsize,
+            fit_allreduce_bytes=fit_term,
+            collectives_by_kind={
+                k: v for k, v in summ.by_kind().items()
+            },
+        )
+
     fits: list[float] = []
     weights = jnp.ones((rank,), x.dtype)
     for it in range(n_iters):

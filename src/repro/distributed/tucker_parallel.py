@@ -366,6 +366,36 @@ def tucker_hooi_parallel(
     xs, fs = place_tucker_state(mesh, x, factors)
     normx_dev = jax.device_put(normx, NamedSharding(mesh, P()))
 
+    from ..observe import trace as _otrace
+
+    if _otrace.should_record(ctx.observe):
+        # Driver level: lower the sweep once more and walk its HLO for the
+        # actual collective bytes next to the Multi-TTM sweep model.
+        from ..observe.metrics import SWEEP_COLLECTIVE_BYTES, registry
+        from .grid_select import multi_ttm_sweep_words
+        from .hlo import parse_collectives
+
+        nproc = int(math.prod(grid))
+        text = sweep.lower(xs, fs, normx_dev).compile().as_text()
+        summ = parse_collectives(text)
+        itemsize = int(x.dtype.itemsize)
+        modeled = int(multi_ttm_sweep_words(x.shape, ranks, grid))
+        registry().observe(SWEEP_COLLECTIVE_BYTES, float(summ.ring_bytes))
+        _otrace.record_event(
+            "tucker_sweep_collectives",
+            shape=list(x.shape),
+            ranks=list(ranks),
+            grid=list(grid),
+            procs=nproc,
+            itemsize=itemsize,
+            measured_collective_bytes=int(summ.ring_bytes),
+            modeled_words=modeled,
+            modeled_bytes=modeled * itemsize,
+            collectives_by_kind={
+                k: v for k, v in summ.by_kind().items()
+            },
+        )
+
     fits: list[float] = []
     core = None
     for it in range(n_iters):

@@ -307,6 +307,12 @@ class ExecutionContext:
     distribution: Distribution | None = None
     problem: ProblemSpec | None = None
     decisions: tuple[PlanDecision, ...] = ()
+    #: Opt this context's driver calls into the observability layer
+    #: (span events into the active repro.observe.Trace, per-sweep
+    #: collective-bytes measurement on the distributed drivers). Off by
+    #: default: the False path adds no ops and no trace-unsafe work, so
+    #: compiled HLO is identical to a pre-observability build.
+    observe: bool = False
 
     # -- eager validation (every construction path runs this) --------------
     def __post_init__(self):
@@ -375,6 +381,7 @@ class ExecutionContext:
         p0: int = 1,
         check_rep: bool | None = None,
         overlap: str = "none",
+        observe: bool = False,
     ) -> "ExecutionContext":
         """Build and eagerly validate a context — THE constructor.
 
@@ -409,6 +416,7 @@ class ExecutionContext:
             backend=backend, memory=memory, out_dtype=out_dtype,
             compute_dtype=compute_dtype, interpret=interpret, tune=tune,
             cache_path=cache_path, distribution=dist,
+            observe=bool(observe),
         )
 
     @classmethod
@@ -691,6 +699,7 @@ class ExecutionContext:
                 self.problem.to_dict() if self.problem is not None else None
             ),
             "decisions": [d.to_dict() for d in self.decisions],
+            "observe": self.observe,
         }
 
     @classmethod
@@ -726,6 +735,8 @@ class ExecutionContext:
             decisions=tuple(
                 PlanDecision.from_dict(x) for x in d.get("decisions", ())
             ),
+            # absent in pre-observability JSON: old artifacts stay loadable
+            observe=bool(d.get("observe", False)),
         )
 
     def to_json(self, *, indent: int | None = None) -> str:

@@ -42,6 +42,8 @@ package, so importing kernels first must not re-enter ``engine``.
 from __future__ import annotations
 
 import math
+import time
+import warnings
 from typing import Sequence
 
 import jax
@@ -49,6 +51,8 @@ import jax.numpy as jnp
 
 from ..core.blocked import mttkrp_blocked
 from ..core.mttkrp import mttkrp as _einsum_mttkrp
+from ..observe import trace as _otrace
+from ..observe.metrics import PALLAS_DISPATCHES, registry
 from .context import (
     UNSET,
     ExecutionContext,
@@ -70,18 +74,42 @@ _L = "abcdefghijklmnopqrstuvw"
 _RANK = "z"
 _RANKS = "ABCDEFGHIJ"  # per-mode Tucker rank letters (Multi-TTM einsum)
 
-# instrumentation: how many contractions were dispatched to the Pallas
-# kernels (tests assert the kernel path is actually taken)
-_pallas_dispatches = 0
-
 
 def pallas_dispatch_count() -> int:
-    return _pallas_dispatches
+    """Deprecated: the kernel-dispatch counter now lives in the metrics
+    registry. Read ``repro.observe.metrics.registry().counter(
+    "engine.pallas_dispatches")`` — and bracket measurements with
+    ``registry().snapshot()`` / ``.delta(before)`` instead of diffing two
+    raw reads."""
+    warnings.warn(
+        "pallas_dispatch_count() is deprecated and will be removed in the "
+        "next release; read repro.observe.metrics.registry().counter("
+        "'engine.pallas_dispatches') (snapshot()/delta() for bracketed "
+        "measurements)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return int(registry().counter(PALLAS_DISPATCHES))
 
 
 def _count_pallas() -> None:
-    global _pallas_dispatches
-    _pallas_dispatches += 1
+    # instrumentation: how many contractions were dispatched to the Pallas
+    # kernels (tests assert the kernel path is actually taken)
+    registry().inc(PALLAS_DISPATCHES)
+
+
+def _span_plan(plan) -> dict | None:
+    """Serialize a plan for a span event (the tune cache's codec, so
+    span plans and cached plans never drift apart)."""
+    if plan is None:
+        return None
+    from ..tune.cache import plan_to_dict  # lazy: engine <-> tune cycle
+
+    return plan_to_dict(plan)
+
+
+def _dtype_policy(ctx: ExecutionContext) -> dict:
+    return {"compute_dtype": ctx.compute_dtype, "out_dtype": ctx.out_dtype}
 
 
 def _cast_compute(ctx: ExecutionContext, x, arrays, out_dtype):
@@ -153,6 +181,65 @@ def mttkrp(
         {"backend": backend, "memory": memory, "interpret": interpret,
          "tune": tune},
     )
+    if not _otrace.should_record(ctx.observe, x, *factors):
+        return _mttkrp_impl(
+            x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
+        )
+    span: dict = {}
+    t0 = time.perf_counter()
+    with _otrace.annotated(f"repro.mttkrp.mode{mode}"):
+        out = _mttkrp_impl(
+            x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
+            _span=span,
+        )
+    rank = next(f.shape[1] for k, f in enumerate(factors) if k != mode)
+    _record_mttkrp_span(
+        "mttkrp", ctx, tuple(x.shape), rank, mode, x.dtype.itemsize,
+        span, t0,
+    )
+    return out
+
+
+def _record_mttkrp_span(
+    kind: str, ctx, shape, rank, mode, itemsize, span, t0, **extra
+) -> None:
+    """Emit one MTTKRP-shaped dispatch event: resolved backend/plan (as
+    filled in by the impl), the Eq-10 modeled words for the plan (the
+    model plan against the resolver's default memory when the backend
+    carried none), and the Thm-4.1 lower bound, clamped at 0."""
+    from ..core.bounds import seq_lb_memory
+
+    mem = ctx.memory or Memory.tpu_vmem(itemsize=itemsize)
+    mode_first = _mode_first(shape, mode) if kind == "mttkrp" else shape
+    plan = span.get("plan")
+    if not isinstance(plan, BlockPlan):
+        plan = choose_blocks(
+            mode_first, rank, itemsize, memory=mem,
+            x_has_rank=bool(span.get("x_has_rank", False)),
+        )
+    event = {
+        "shape": list(shape),
+        "rank": int(rank),
+        "mode": int(mode),
+        "backend": span.get("backend"),
+        "plan": _span_plan(span.get("plan")),
+        "modeled_words": int(plan.eq10_words(mode_first, rank)),
+        "lower_bound_words": max(
+            seq_lb_memory(shape, rank, mem.budget_words), 0.0
+        ),
+        "memory_words": mem.budget_words,
+        "itemsize": int(itemsize),
+        "wall_time_us": (time.perf_counter() - t0) * 1e6,
+        **_dtype_policy(ctx),
+        **extra,
+    }
+    _otrace.record_event(kind, **event)
+
+
+def _mttkrp_impl(
+    x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
+    _span: dict | None = None,
+):
     backend = ctx.backend
     memory = ctx.memory
     interpret = ctx.interpret
@@ -182,6 +269,8 @@ def mttkrp(
         block = block if block is not None else decision.block
         kernel_variant = kernel_variant or decision.variant
     check_backend(backend)
+    if _span is not None:
+        _span["backend"] = backend
     if backend == "einsum":
         out = _einsum_mttkrp_f32acc(x, factors, mode) if mixed \
             else _einsum_mttkrp(x, factors, mode)
@@ -190,6 +279,8 @@ def mttkrp(
         if block is None:
             mem = memory or Memory.abstract(2 ** 20)
             block = best_uniform_block(x.shape, mem)
+        if _span is not None:
+            _span["block"] = block
         out = mttkrp_blocked(x, factors, mode, block)
         return out.astype(out_dtype) if out_dtype is not None else out
     # pallas
@@ -210,6 +301,9 @@ def mttkrp(
             _mode_first(x.shape, mode), rank, x.dtype.itemsize,
             memory=memory,
         )
+    if _span is not None:
+        _span["plan"] = plan
+        _span["variant"] = kernel_variant
     _count_pallas()
     return kernel_ops.mttkrp_pallas(
         x, factors, mode, plan=plan, interpret=interpret,
@@ -261,6 +355,35 @@ def contract_partial(
         {"backend": backend, "memory": memory, "interpret": interpret,
          "tune": tune},
     )
+    if not _otrace.should_record(ctx.observe, node, *factors):
+        return _contract_partial_impl(
+            node, factors, modes, drop, has_rank, ctx, plan
+        )
+    span: dict = {}
+    t0 = time.perf_counter()
+    with _otrace.annotated("repro.contract_partial"):
+        out = _contract_partial_impl(
+            node, factors, modes, drop, has_rank, ctx, plan, _span=span,
+        )
+    modes_t, drop_t = tuple(modes), tuple(drop)
+    keep = tuple(m for m in modes_t if m not in drop_t)
+    pos = {m: i for i, m in enumerate(modes_t)}
+    canon = (
+        math.prod(node.shape[pos[m]] for m in keep) if keep else 1,
+    ) + tuple(node.shape[pos[m]] for m in drop_t)
+    span["x_has_rank"] = has_rank
+    _record_mttkrp_span(
+        "contract_partial", ctx, canon, factors[drop_t[0]].shape[1], 0,
+        node.dtype.itemsize, span, t0,
+        modes=list(modes_t), drop=list(drop_t), has_rank=bool(has_rank),
+    )
+    return out
+
+
+def _contract_partial_impl(
+    node, factors, modes, drop, has_rank, ctx, plan,
+    _span: dict | None = None,
+):
     backend = ctx.backend
     memory = ctx.memory
     interpret = ctx.interpret
@@ -293,6 +416,8 @@ def contract_partial(
         if auto_plan is None:
             auto_plan = resolved.plan
     check_backend(backend)
+    if _span is not None:
+        _span["backend"] = backend
     if backend != "pallas":
         # Algorithm 2's schedule matters only below the einsum boundary
         # here; blocked_host partials fall back to einsum (the host-blocked
@@ -336,6 +461,8 @@ def contract_partial(
                 x_has_rank=True,
             ) if memory is not None else None
         )
+        if _span is not None:
+            _span["plan"] = plan
         out = kernel_ops.mttkrp_partial_canonical_pallas(
             xp, fs, plan=plan, interpret=interpret,
             out_dtype=out_dtype if mixed else node.dtype,
@@ -347,6 +474,8 @@ def contract_partial(
                 xp.shape, rank, itemsize, memory=memory
             ) if memory is not None else None
         )
+        if _span is not None:
+            _span["plan"] = plan
         out = kernel_ops.mttkrp_canonical_pallas(
             xp, fs, plan=plan, interpret=interpret,
             out_dtype=out_dtype if mixed else node.dtype,
@@ -437,6 +566,62 @@ def multi_ttm(
                 f"matrix {k} has {m.shape[0]} rows but tensor mode {k} "
                 f"has extent {x.shape[k]}"
             )
+    concrete_mats = [m for m in matrices if m is not None]
+    if not _otrace.should_record(ctx.observe, x, *concrete_mats):
+        return _multi_ttm_impl(x, matrices, keep, ctx, plan, block, out_dtype)
+    span: dict = {}
+    t0 = time.perf_counter()
+    with _otrace.annotated(f"repro.multi_ttm.keep{keep}"):
+        out = _multi_ttm_impl(
+            x, matrices, keep, ctx, plan, block, out_dtype, _span=span,
+        )
+    _record_multi_ttm_span(
+        ctx, tuple(x.shape),
+        tuple(m.shape[1] for k, m in enumerate(matrices) if k != keep),
+        keep, x.dtype.itemsize, span, t0,
+    )
+    return out
+
+
+def _record_multi_ttm_span(
+    ctx, shape, ranks, keep, itemsize, span, t0
+) -> None:
+    """Emit one Multi-TTM dispatch event: resolved backend/plan, the
+    blocked model words (``MultiTTMPlan.model_words``) and the HBL
+    sequential lower bound, clamped at 0."""
+    from ..core.bounds import multi_ttm_seq_lb_memory
+
+    mem = ctx.memory or Memory.tpu_vmem(itemsize=itemsize)
+    canon = _keep_first(shape, 0 if keep is None else keep)
+    plan = span.get("plan")
+    if not isinstance(plan, MultiTTMPlan):
+        kernel_ranks = ranks[1:] if keep is None else ranks
+        plan = choose_multi_ttm_blocks(
+            canon, kernel_ranks, itemsize, memory=mem
+        )
+    _otrace.record_event(
+        "multi_ttm",
+        shape=list(shape),
+        ranks=list(ranks),
+        keep=keep,
+        backend=span.get("backend"),
+        plan=_span_plan(span.get("plan")),
+        modeled_words=int(plan.model_words(canon)),
+        lower_bound_words=max(
+            multi_ttm_seq_lb_memory(shape, ranks, mem.budget_words), 0.0
+        ),
+        memory_words=mem.budget_words,
+        itemsize=int(itemsize),
+        wall_time_us=(time.perf_counter() - t0) * 1e6,
+        **_dtype_policy(ctx),
+    )
+
+
+def _multi_ttm_impl(
+    x, matrices, keep, ctx, plan, block, out_dtype,
+    _span: dict | None = None,
+):
+    n = x.ndim
     backend = ctx.backend
     memory = ctx.memory
     interpret = ctx.interpret
@@ -481,6 +666,8 @@ def multi_ttm(
         plan = plan if plan is not None else decision.plan
         block = block if block is not None else decision.block
     check_backend(backend)
+    if _span is not None:
+        _span["backend"] = backend
     if backend == "einsum" or (backend == "pallas" and n < 3):
         out = _multi_ttm_einsum(x, matrices, keep, f32_acc=mixed)
         return out.astype(out_dtype) if out_dtype is not None else out
@@ -517,6 +704,8 @@ def multi_ttm(
         plan = choose_multi_ttm_blocks(
             canon, kernel_ranks, x.dtype.itemsize, memory=memory
         )
+    if _span is not None:
+        _span["plan"] = plan
     _count_pallas()
     out2d = kernel_ops.multi_ttm_canonical_pallas(
         xp, mats, plan=plan, interpret=interpret

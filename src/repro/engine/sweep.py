@@ -34,14 +34,17 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from ..observe import trace as _otrace
 from .context import ExecutionContext
-from .execute import _count_pallas, contract_partial, mttkrp
+from .execute import _count_pallas, _span_plan, contract_partial, mttkrp
 
 
 def _fused_pair(x: jax.Array, factors, ctx: ExecutionContext):
     """The sweep's opening ``(B0, P')`` pair. One pallas dispatch on the
     pallas backend; two ``contract_partial`` calls elsewhere (``auto``
     resolves each edge through the tune cache as usual)."""
+    import time
+
     n = x.ndim
     modes = tuple(range(n))
     inner = tuple(range(n - 1))
@@ -62,9 +65,29 @@ def _fused_pair(x: jax.Array, factors, ctx: ExecutionContext):
                 x.shape, fs[0].shape[1], x.dtype.itemsize, memory=mem
             )
         _count_pallas()
-        return fused_pair_canonical_pallas(
-            x, fs, plan=plan, interpret=ctx.interpret, out_dtype=orig_dtype
+        if not _otrace.should_record(ctx.observe, x, *fs):
+            return fused_pair_canonical_pallas(
+                x, fs, plan=plan, interpret=ctx.interpret,
+                out_dtype=orig_dtype,
+            )
+        t0 = time.perf_counter()
+        with _otrace.annotated("repro.fused_pair"):
+            out = fused_pair_canonical_pallas(
+                x, fs, plan=plan, interpret=ctx.interpret,
+                out_dtype=orig_dtype,
+            )
+        _otrace.record_event(
+            "fused_pair",
+            shape=list(x.shape),
+            rank=int(fs[0].shape[1]),
+            backend="pallas",
+            plan=_span_plan(plan),
+            itemsize=int(x.dtype.itemsize),
+            wall_time_us=(time.perf_counter() - t0) * 1e6,
+            compute_dtype=ctx.compute_dtype,
+            out_dtype=ctx.out_dtype,
         )
+        return out
     p = contract_partial(x, factors, modes, (n - 1,), False, ctx=ctx)
     b0 = contract_partial(
         p, factors, inner, tuple(range(1, n - 1)), True, ctx=ctx

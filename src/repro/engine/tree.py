@@ -22,6 +22,7 @@ from typing import Callable, Dict, Sequence
 
 import jax
 
+from ..observe import trace as _otrace
 from .context import UNSET, ExecutionContext, context_from_legacy
 from .execute import contract_partial, mttkrp
 
@@ -92,6 +93,14 @@ def all_mode_mttkrp(
         raise ValueError(
             f"unknown method {method!r}; expected 'dimtree' or "
             f"'independent'"
+        )
+    if _otrace.should_record(ctx.observe, x, *factors):
+        _otrace.record_event(
+            "dimtree_sweep",
+            shape=list(x.shape),
+            rank=int(factors[0].shape[1]),
+            backend=ctx.backend,
+            n_modes=n,
         )
     results: Dict[int, jax.Array] = {}
     _solve_tree(

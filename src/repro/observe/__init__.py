@@ -1,0 +1,45 @@
+"""repro.observe: tracing, metrics, and bound-aware auditing.
+
+The observability layer threaded through every engine dispatch (see
+``docs/ARCHITECTURE.md`` § Observability):
+
+* :class:`~repro.observe.trace.Trace` — context-manager span recorder
+  (ring buffer + JSONL export + profiler annotations), gated by
+  ``ExecutionContext.observe`` / the trace's ``capture`` policy.
+* :class:`~repro.observe.metrics.MetricsRegistry` (via
+  :func:`~repro.observe.metrics.registry`) — process-local counters /
+  gauges / histograms; absorbs the old ``pallas_dispatch_count()``
+  global behind snapshot-based reads.
+* :mod:`~repro.observe.bounds_audit` — measured-bytes / modeled-words /
+  lower-bound triples per compiled dispatch (the paper's claim as a
+  runtime metric).
+* ``python -m repro.observe.report`` — markdown dispatch table with
+  model / measured / bound columns from a JSONL trace.
+"""
+
+from .bounds_audit import AuditRow, audit_mttkrp, audit_multi_ttm
+from .metrics import MetricsRegistry, registry
+from .trace import (
+    SPAN_SCHEMA,
+    Trace,
+    current_trace,
+    load_trace,
+    record_event,
+    should_record,
+    summarize_events,
+)
+
+__all__ = [
+    "Trace",
+    "MetricsRegistry",
+    "registry",
+    "AuditRow",
+    "audit_mttkrp",
+    "audit_multi_ttm",
+    "SPAN_SCHEMA",
+    "current_trace",
+    "load_trace",
+    "record_event",
+    "should_record",
+    "summarize_events",
+]

@@ -1,0 +1,240 @@
+"""Structured tracing: span events for every engine dispatch.
+
+A :class:`Trace` is a context manager that captures *span events* — one
+dict per engine dispatch / driver iteration / distributed sweep — into an
+in-memory ring buffer, with a JSONL exporter (one event per line, stable
+schema) and ``jax.named_scope`` / ``jax.profiler.TraceAnnotation``
+annotations so observed dispatches are visible in TPU profiler traces::
+
+    ctx = repro.ExecutionContext.create(observe=True)
+    with repro.Trace(path="run.jsonl") as t:
+        repro.cp_als(x, rank=8, ctx=ctx)
+    t.events                    # the recorded span dicts
+    # run.jsonl: one JSON object per line, schema repro.observe.Span/1
+
+Every event carries ``schema`` / ``seq`` / ``time_s`` / ``kind`` plus
+kind-specific fields.  Engine dispatch events (``kind`` in ``mttkrp`` /
+``contract_partial`` / ``multi_ttm`` / ``fused_pair``) record the
+resolved backend, the block plan, the modeled traffic in words
+(``BlockPlan.eq10_words`` / ``MultiTTMPlan.model_words`` — the paper's
+Eq (10) and its Multi-TTM analog), the memory-dependent sequential lower
+bound (``seq_lb_memory``, clamped at 0), the dtype policy, and the
+dispatch wall time.  Driver events (``cp_als_iter`` / ``tucker_iter``)
+record per-iteration fit / λ / convergence; distributed sweep events
+(``cp_sweep_collectives`` / ``tucker_sweep_collectives``) record
+HLO-measured collective bytes next to the sweep cost model.
+
+Gating — the zero-overhead contract
+-----------------------------------
+Nothing is recorded unless a ``Trace`` is active (entering one pushes it
+on a process-local stack).  While one is active:
+
+* ``capture="all"`` (default): every engine call records events — an
+  explicit ``with Trace():`` block is itself the opt-in.
+* ``capture="observed"``: only calls whose
+  ``ExecutionContext.observe`` is True record — per-context opt-in for
+  tracing one workload inside a larger program.
+
+Recording is *driver-side only*: when the operands are jax tracers (the
+call is being traced into a jit/shard_map program) nothing runs — no
+event, no annotation — so compiled HLO is byte-identical with observe
+on or off, and shard_map sweep bodies stay collective-clean.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Any, Iterable
+
+from .metrics import TRACE_EVENTS_DROPPED, registry
+
+SPAN_SCHEMA = "repro.observe.Span/1"
+
+#: Keys every event carries, in emission order (the round-trip contract
+#: tests pin; kind-specific fields follow these).
+BASE_FIELDS = ("schema", "seq", "time_s", "kind")
+
+_ACTIVE: list["Trace"] = []
+
+
+class Trace:
+    """Record engine span events while active; export them as JSONL.
+
+    ``capacity`` bounds the in-memory ring buffer (oldest events are
+    evicted, counted under the ``trace.events_dropped`` metric);
+    ``path`` exports the buffer as JSONL on clean exit;
+    ``capture`` is ``"all"`` (record every engine call) or
+    ``"observed"`` (record only ``ExecutionContext.observe=True`` calls);
+    ``annotate`` wraps observed dispatches in ``jax.named_scope`` +
+    ``jax.profiler.TraceAnnotation`` so they appear in profiler traces.
+    """
+
+    def __init__(
+        self,
+        capacity: int = 4096,
+        *,
+        path: str | None = None,
+        capture: str = "all",
+        annotate: bool = True,
+    ) -> None:
+        if capture not in ("all", "observed"):
+            raise ValueError(
+                f"capture must be 'all' (every engine call records while "
+                f"this trace is active) or 'observed' (only "
+                f"ExecutionContext.observe=True calls), got {capture!r}"
+            )
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.path = path
+        self.capture = capture
+        self.annotate = annotate
+        self._buf: deque[dict] = deque(maxlen=self.capacity)
+        self._seq = 0
+
+    # -- context management --------------------------------------------------
+    def __enter__(self) -> "Trace":
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        _ACTIVE.remove(self)
+        if self.path is not None and exc_type is None:
+            self.export(self.path)
+
+    # -- recording -----------------------------------------------------------
+    def record(self, kind: str, **fields: Any) -> dict:
+        """Append one span event (ring-buffered) and return it."""
+        if len(self._buf) == self._buf.maxlen:
+            registry().inc(TRACE_EVENTS_DROPPED)
+        event = {
+            "schema": SPAN_SCHEMA,
+            "seq": self._seq,
+            "time_s": time.time(),
+            "kind": kind,
+        }
+        event.update(fields)
+        self._seq += 1
+        self._buf.append(event)
+        return event
+
+    @property
+    def events(self) -> list[dict]:
+        """The buffered span events, oldest first (a copy)."""
+        return list(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    # -- export --------------------------------------------------------------
+    def export(self, path: str) -> int:
+        """Write the buffer as JSONL (one event per line); returns the
+        number of events written."""
+        events = self.events
+        with open(path, "w") as f:
+            for e in events:
+                f.write(json.dumps(e, sort_keys=True) + "\n")
+        return len(events)
+
+
+def current_trace() -> Trace | None:
+    """The innermost active :class:`Trace`, or None."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def load_trace(path: str) -> list[dict]:
+    """Read a JSONL trace file back into its list of span events."""
+    out: list[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The wiring helpers the engine layers call
+# ---------------------------------------------------------------------------
+
+def _is_tracer(*arrays: Any) -> bool:
+    import jax
+
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def should_record(ctx_observe: bool, *arrays: Any) -> bool:
+    """One cheap gate for every wiring site: is a trace active, does its
+    capture policy admit this call, and are the operands concrete (under
+    jit/shard_map tracing nothing may run)?"""
+    t = current_trace()
+    if t is None:
+        return False
+    if t.capture == "observed" and not ctx_observe:
+        return False
+    return not _is_tracer(*arrays)
+
+
+def record_event(kind: str, **fields: Any) -> dict | None:
+    """Record into the active trace (no-op without one)."""
+    t = current_trace()
+    if t is None:
+        return None
+    return t.record(kind, **fields)
+
+
+@contextmanager
+def annotated(name: str):
+    """``jax.named_scope`` + profiler annotation around one observed
+    dispatch — only entered when the active trace asks for annotations
+    (and never under tracing; see :func:`should_record`)."""
+    t = current_trace()
+    if t is None or not t.annotate:
+        yield
+        return
+    import jax
+
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+def summarize_events(events: Iterable[dict]) -> dict:
+    """Aggregate a span-event stream into the summary benchmark rows
+    embed: event count, total modeled words, total measured bytes (when
+    any event carries them), total lower-bound words, and the
+    measured-bytes / modeled-bytes optimality ratio when both sides are
+    known."""
+    n = 0
+    modeled_words = 0.0
+    modeled_bytes = 0.0
+    measured_bytes = 0.0
+    lower_bound_words = 0.0
+    have_measured = False
+    for e in events:
+        n += 1
+        mw = e.get("modeled_words")
+        if mw is not None:
+            modeled_words += float(mw)
+            itemsize = float(e.get("itemsize", 4))
+            modeled_bytes += float(mw) * itemsize
+        lb = e.get("lower_bound_words")
+        if lb is not None:
+            lower_bound_words += float(lb)
+        mb = e.get("measured_bytes")
+        if mb is not None:
+            measured_bytes += float(mb)
+            have_measured = True
+    summary = {
+        "events": n,
+        "modeled_words": modeled_words,
+        "lower_bound_words": lower_bound_words,
+        "measured_bytes": measured_bytes if have_measured else None,
+        "optimality_ratio": (
+            measured_bytes / modeled_bytes
+            if have_measured and modeled_bytes > 0 else None
+        ),
+    }
+    return summary

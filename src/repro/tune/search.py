@@ -245,6 +245,9 @@ def _measure_one(
     ``call``. The shared core of full-MTTKRP and partial-contraction
     measurement; failures are recorded, never raised — a candidate that
     crashes or is wrong simply loses."""
+    from ..observe.metrics import TUNE_CANDIDATES, registry
+
+    registry().inc(TUNE_CANDIDATES)
     m = Measurement(cand, modeled_bytes=modeled_bytes)
     try:
         got = call()
@@ -350,6 +353,10 @@ def search(
     by modeled traffic and times only the best one against the host
     executors; ``metric="walltime"`` times everything.
     """
+    from ..observe import trace as _otrace
+    from ..observe.metrics import TUNE_SEARCH_TIME_US, registry
+
+    _search_t0 = time.perf_counter()
     if ctx is not None:
         memory = memory if memory is not None else ctx.memory
         interpret = interpret if interpret is not None else ctx.interpret
@@ -394,6 +401,20 @@ def search(
         )
     _assign_scores(measurements, metric)
     winner = min(ok, key=lambda m: m.walltime_us).candidate
+    search_us = (time.perf_counter() - _search_t0) * 1e6
+    registry().observe(TUNE_SEARCH_TIME_US, search_us)
+    if _otrace.should_record(ctx.observe if ctx is not None else False):
+        _otrace.record_event(
+            "tune_search",
+            shape=list(perm_shape),
+            rank=int(rank),
+            mode=int(mode),
+            metric=metric,
+            candidates=len(measurements),
+            timed=len(timed),
+            winner=winner.label,
+            search_time_us=search_us,
+        )
     return TuneResult(key, winner, measurements, metric)
 
 
@@ -809,6 +830,20 @@ class Resolved:
     key: str
 
 
+def _count_cache(entry) -> None:
+    """Tune-cache hit/miss telemetry (always-on, like the dispatch
+    counter — registry reads are bracketed with snapshot()/delta())."""
+    from ..observe.metrics import (
+        TUNE_CACHE_HITS,
+        TUNE_CACHE_MISSES,
+        registry,
+    )
+
+    registry().inc(
+        TUNE_CACHE_HITS if entry is not None else TUNE_CACHE_MISSES
+    )
+
+
 def resolve(
     shape: Sequence[int],
     rank: int,
@@ -831,6 +866,7 @@ def resolve(
     key = cache_key(shape, rank, mode, dtype, mem, kind=kind)
     cache = cache if cache is not None else default_cache()
     entry = cache.get(key)
+    _count_cache(entry)
     if entry is not None:
         return Resolved(
             entry.backend, entry.to_plan(), entry.variant, entry.block,
@@ -869,6 +905,7 @@ def resolve_multi_ttm(
     )
     cache = cache if cache is not None else default_cache()
     entry = cache.get(key)
+    _count_cache(entry)
     if entry is not None:
         return Resolved(
             entry.backend, entry.to_plan(), entry.variant, entry.block,
@@ -1063,6 +1100,7 @@ def resolve_sweep(
     key = cache_key(shape, rank, -1, dtype, mem, kind="sweep")
     cache = cache if cache is not None else default_cache()
     entry = cache.get(key)
+    _count_cache(entry)
     if entry is not None:
         return Resolved(
             entry.backend, entry.to_plan(), entry.variant, entry.block,

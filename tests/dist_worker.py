@@ -435,12 +435,17 @@ def check_context_roundtrip_reproduces_sweep():
     """A serialized ExecutionContext is a reproducible artifact: building
     the distributed sweep from ``from_json(to_json(ctx))`` emits the SAME
     program — identical HLO-measured collective bytes — and the pallas
-    local path dispatches the same number of kernels per trace."""
+    local path dispatches the same number of kernels per trace.  Also the
+    observability no-overhead guarantee: ``observe=True`` lowers to HLO
+    *identical* to ``observe=False`` (recording is driver-side only;
+    nothing observability-related may enter the traced program)."""
+    import dataclasses
+
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro import ExecutionContext
     from repro.core.tensor import frob_norm
-    from repro.engine.execute import pallas_dispatch_count
+    from repro.observe.metrics import PALLAS_DISPATCHES, registry
 
     dims, rank = (16, 16, 24), 4
     x = random_tensor(jax.random.PRNGKey(40), dims)
@@ -453,21 +458,30 @@ def check_context_roundtrip_reproduces_sweep():
     assert ctx2 == ctx and hash(ctx2) == hash(ctx)
     assert ctx2.distribution.grid == ctx.distribution.grid
 
-    def measure(c):
+    def measure(c, want_text=False):
         mesh = c.build_mesh(dims, rank)
         sweep = build_cp_sweep(mesh, 3, ctx=c)
         xs, f_sh, blocks, grams = place_cp_state(mesh, x, fs)
         normx = jax.device_put(frob_norm(x), NamedSharding(mesh, P()))
-        before = pallas_dispatch_count()
+        before = registry().counter(PALLAS_DISPATCHES)
         lowered = sweep.lower(xs, f_sh, blocks, grams, normx)
-        dispatches = pallas_dispatch_count() - before
-        ring = parse_collectives(lowered.compile().as_text()).ring_bytes
-        return ring, dispatches
+        dispatches = registry().counter(PALLAS_DISPATCHES) - before
+        text = lowered.compile().as_text()
+        ring = parse_collectives(text).ring_bytes
+        return (ring, dispatches, text) if want_text else (ring, dispatches)
 
     bytes1, disp1 = measure(ctx)
     bytes2, disp2 = measure(ctx2)
     assert bytes1 == bytes2, (bytes1, bytes2)
     assert disp1 == disp2 and disp1 > 0, (disp1, disp2)
+
+    _, _, text_off = measure(
+        dataclasses.replace(ctx, observe=False), want_text=True
+    )
+    _, _, text_on = measure(
+        dataclasses.replace(ctx, observe=True), want_text=True
+    )
+    assert text_on == text_off, "observe=True changed the sweep HLO"
     print("PASS context_roundtrip_reproduces_sweep")
 
 
@@ -597,16 +611,16 @@ def check_tucker_sweep_pallas_local():
     from repro.core.tensor import random_tucker_tensor
     from repro.distributed.tucker_parallel import tucker_hooi_parallel
     from repro.engine.context import ExecutionContext
-    from repro.engine.execute import pallas_dispatch_count
+    from repro.observe.metrics import PALLAS_DISPATCHES, registry
 
     dims, ranks = (16, 16, 24), (4, 3, 2)
     x, _, _ = random_tucker_tensor(jax.random.PRNGKey(54), dims, ranks)
     ctx = ExecutionContext.create(
         backend="pallas", interpret=True, distributed=True, grid=(2, 2, 2)
     )
-    before = pallas_dispatch_count()
+    before = registry().counter(PALLAS_DISPATCHES)
     par = tucker_hooi_parallel(x, ranks, n_iters=4, ctx=ctx)
-    assert pallas_dispatch_count() > before
+    assert registry().counter(PALLAS_DISPATCHES) > before
     ref = tucker_hooi_parallel(x, ranks, n_iters=4, grid=(2, 2, 2))
     for fp, fr in zip(par.fits, ref.fits):
         assert abs(fp - fr) < 1e-3, (par.fits, ref.fits)

@@ -30,6 +30,7 @@ DOCUMENTED_SURFACE = [
     "TuckerResult",
     "select_grid",
     "select_tucker_grid",
+    "Trace",
 ]
 
 
@@ -102,6 +103,17 @@ def test_multi_ttm_surface_is_documented():
         multi_ttm_kernel.multi_ttm_keep_pallas,
         search.tune_multi_ttm,
         search.resolve_multi_ttm,
+    ]
+    from repro.observe import bounds_audit, metrics, trace
+
+    audited += [
+        trace.Trace,
+        trace.summarize_events,
+        metrics.MetricsRegistry,
+        metrics.registry,
+        bounds_audit.AuditRow,
+        bounds_audit.audit_mttkrp,
+        bounds_audit.audit_multi_ttm,
     ]
     for obj in audited:
         assert obj.__doc__ and len(obj.__doc__.strip()) > 20, (

@@ -13,8 +13,14 @@ import pytest
 import repro
 from repro import BlockPlan, Distribution, ExecutionContext, Memory
 from repro.engine.context import PlanDecision, ProblemSpec
-from repro.engine.execute import pallas_dispatch_count
+from repro.observe.metrics import PALLAS_DISPATCHES, registry
 from repro.tune.cache import isolated_cache
+
+
+def _dispatches() -> int:
+    """Current pallas dispatch counter (the migrated global: bracket
+    reads with before/after instead of resetting anything)."""
+    return registry().counter(PALLAS_DISPATCHES)
 
 
 @pytest.fixture()
@@ -186,9 +192,9 @@ def test_env_seed_reaches_drivers(tmp_path, monkeypatch):
     p = tmp_path / "ctx.json"
     ctx.save(str(p))
     monkeypatch.setenv("REPRO_CONTEXT", str(p))
-    before = pallas_dispatch_count()
+    before = _dispatches()
     out = repro.mttkrp(x, fs, 0)  # no ctx, no kwargs — seeded from env
-    after = pallas_dispatch_count()
+    after = _dispatches()
     assert after == before + 1
     np.testing.assert_allclose(
         np.asarray(out),
@@ -243,11 +249,11 @@ def test_same_context_same_plans_and_dispatch_counts(tuned_env):
     assert ctx2.decisions == ctx.decisions
 
     def run(c):
-        before = pallas_dispatch_count()
+        before = _dispatches()
         res = repro.cp_als(
             x, rank, n_iters=2, key=jax.random.PRNGKey(7), ctx=c
         )
-        return pallas_dispatch_count() - before, res
+        return _dispatches() - before, res
 
     n1, r1 = run(ctx)
     n2, r2 = run(ctx2)
@@ -271,9 +277,9 @@ def test_decisions_replay_without_reresolving(tuned_env):
     )
     # on CPU the miss path resolves to einsum for every mode
     assert all(d.backend == "einsum" for d in ctx.decisions)
-    before = pallas_dispatch_count()
+    before = _dispatches()
     repro.mttkrp(x, fs, 0, ctx=ctx)
-    assert pallas_dispatch_count() == before  # replayed einsum, no kernel
+    assert _dispatches() == before  # replayed einsum, no kernel
 
 
 def test_for_problem_with_tune_leaves_decisions_unpinned(tuned_env):

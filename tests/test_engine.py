@@ -24,10 +24,14 @@ from repro.engine import (
     choose_blocks,
     dimtree_als_sweep,
     mttkrp,
-    pallas_dispatch_count,
 )
 from repro.engine.plan import uniform_plan
 from repro.kernels.ref import mttkrp_ref
+from repro.observe.metrics import PALLAS_DISPATCHES, registry
+
+
+def _dispatches() -> int:
+    return registry().counter(PALLAS_DISPATCHES)
 
 
 def _mk(dims, rank, seed=0, dtype=jnp.float32):
@@ -160,11 +164,11 @@ def test_explicit_plan_padding_path():
 @pytest.mark.parametrize("dims", [(8, 7, 9), (6, 5, 4, 3), (4, 5, 3, 4, 3)])
 def test_dimtree_pallas_all_modes(dims):
     x, fs = _mk(dims, 4, seed=4)
-    before = pallas_dispatch_count()
+    before = _dispatches()
     outs = all_mode_mttkrp(x, fs, method="dimtree", backend="pallas",
                            interpret=True)
     # every tree edge must have gone through the kernels
-    assert pallas_dispatch_count() - before >= 2 * (len(dims) - 1)
+    assert _dispatches() - before >= 2 * (len(dims) - 1)
     for mode in range(len(dims)):
         np.testing.assert_allclose(
             outs[mode], mttkrp_ref(x, fs, mode), rtol=5e-4, atol=5e-4
@@ -197,12 +201,12 @@ def test_cp_als_dimtree_pallas_matches_plain():
     x, fs = _mk((8, 7, 6, 5), 2, seed=6)
     x = x / jnp.linalg.norm(x.reshape(-1))
     plain = cp_als(x, 2, n_iters=6, init_factors=fs)
-    before = pallas_dispatch_count()
+    before = _dispatches()
     tree = cp_als(
         x, 2, n_iters=6, init_factors=fs, use_dimension_tree=True,
         backend="pallas", interpret=True,
     )
-    assert pallas_dispatch_count() > before  # kernel path taken
+    assert _dispatches() > before  # kernel path taken
     for a, b in zip(plain.fits, tree.fits):
         assert abs(a - b) < 5e-3
     for fa, fb in zip(plain.factors, tree.factors):

@@ -228,15 +228,15 @@ def test_tucker_hooi_backend_parity():
 
 
 def test_tucker_hooi_pallas_dispatches_kernel():
-    from repro.engine.execute import pallas_dispatch_count
+    from repro.observe.metrics import PALLAS_DISPATCHES, registry
 
     x, _, _ = random_tucker_tensor(
         jax.random.PRNGKey(5), (12, 10, 8), (3, 3, 2)
     )
     ctx = repro.ExecutionContext.create(backend="pallas", interpret=True)
-    before = pallas_dispatch_count()
+    before = registry().counter(PALLAS_DISPATCHES)
     tucker_hooi(x, (3, 3, 2), n_iters=1, ctx=ctx)
-    assert pallas_dispatch_count() > before
+    assert registry().counter(PALLAS_DISPATCHES) > before
 
 
 def test_tucker_hooi_hosvd_only_and_tol():
