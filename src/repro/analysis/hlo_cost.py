@@ -20,8 +20,6 @@ comparison constant in the loop condition).
 
 from __future__ import annotations
 
-import json
-import math
 import re
 from dataclasses import dataclass, field
 

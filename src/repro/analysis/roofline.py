@@ -55,10 +55,6 @@ class RooflineTerms:
         """Model-FLOPs utilization at the overlapped bound."""
         if self.step_time_overlapped == 0:
             return 0.0
-        ideal = self.model_flops_total and (
-            self.model_flops_total
-            / (self.flops_per_device / max(self.t_compute, 1e-30))
-        )
         # MFU = model_flops / (chips*peak) / step_time; chips already folded
         return self.useful_ratio * (
             self.t_compute / self.step_time_overlapped

@@ -373,7 +373,6 @@ def matmul_par_cost(dims: Sequence[int], rank: int, procs: int) -> float:
     small P; (I R / P)^{2/3} for large P; plus the (ignored by the paper,
     also ignored here) KRP formation communication.
     """
-    n = len(dims)
     i = total_size(dims)
     i_n = dims[0]
     small_p = i_n * rank  # one-large-dim regime: communicate the small matrices

@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from .tensor import matricize
 

@@ -25,7 +25,6 @@ broadcast.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Sequence
 
 import jax

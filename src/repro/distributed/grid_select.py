@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Callable, Sequence
 
 from ..core.bounds import par_general_cost, par_stationary_cost
 from ..core.grid import _divisors, _factorization_tuples
@@ -160,8 +160,8 @@ def shardable(
 def _search_separable(
     dims: Sequence[int],
     procs: int,
-    term,
-    feasible=None,
+    term: Callable[[int, int], float],
+    feasible: Callable[[tuple[int, ...]], bool] | None = None,
 ) -> tuple[float, tuple[int, ...]] | None:
     """The shared branch-and-bound: minimize ``sum_k term(k, p_k)`` over
     all ordered divisor tuples of ``procs`` with ``p_k <= dims[k]``.
@@ -174,7 +174,9 @@ def _search_separable(
     n = len(dims)
     best: tuple[float, tuple[int, ...]] | None = None
 
-    def recurse(k: int, remaining: int, partial: float, acc: list[int]):
+    def recurse(
+        k: int, remaining: int, partial: float, acc: list[int]
+    ) -> None:
         nonlocal best
         if best is not None and partial >= best[0]:
             return  # every remaining term is >= 0
@@ -266,7 +268,9 @@ def select_general_grid(
             w = math.ceil(dims[k] / pk) * math.ceil(rank / p0) / slice_sz
             return (slice_sz - 1) * w
 
-        def recurse(k: int, remaining: int, partial: float, acc: list[int]):
+        def recurse(
+            k: int, remaining: int, partial: float, acc: list[int]
+        ) -> None:
             nonlocal best
             if best is not None and partial >= best[0]:
                 return

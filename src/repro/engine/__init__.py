@@ -39,7 +39,7 @@ from .plan import (
     uniform_block_feasible,
     uniform_multi_ttm_plan,
 )
-from .execute import mttkrp, contract_partial, multi_ttm, pallas_dispatch_count
+from .execute import mttkrp, contract_partial, multi_ttm
 from .tree import all_mode_mttkrp, dimtree_als_sweep
 
 __all__ = [
@@ -66,7 +66,6 @@ __all__ = [
     "mttkrp",
     "contract_partial",
     "multi_ttm",
-    "pallas_dispatch_count",
     "all_mode_mttkrp",
     "dimtree_als_sweep",
 ]

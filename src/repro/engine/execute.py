@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import math
 import time
-import warnings
 from typing import Sequence
 
 import jax
@@ -73,23 +72,6 @@ BACKENDS = ("einsum", "blocked_host", "pallas")
 _L = "abcdefghijklmnopqrstuvw"
 _RANK = "z"
 _RANKS = "ABCDEFGHIJ"  # per-mode Tucker rank letters (Multi-TTM einsum)
-
-
-def pallas_dispatch_count() -> int:
-    """Deprecated: the kernel-dispatch counter now lives in the metrics
-    registry. Read ``repro.observe.metrics.registry().counter(
-    "engine.pallas_dispatches")`` — and bracket measurements with
-    ``registry().snapshot()`` / ``.delta(before)`` instead of diffing two
-    raw reads."""
-    warnings.warn(
-        "pallas_dispatch_count() is deprecated and will be removed in the "
-        "next release; read repro.observe.metrics.registry().counter("
-        "'engine.pallas_dispatches') (snapshot()/delta() for bracketed "
-        "measurements)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return int(registry().counter(PALLAS_DISPATCHES))
 
 
 def _count_pallas() -> None:

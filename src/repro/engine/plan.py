@@ -99,16 +99,31 @@ class BlockPlan:
     x_has_rank: bool = False
 
     # -- Eq 9: working set -------------------------------------------------
+    def kernel_block_words(self) -> int:
+        """VMEM words held by the kernel's BlockSpec operand tiles alone:
+        X tile + factor tiles + output tile.  This is the part of the Eq-9
+        working set that the Pallas ``BlockSpec`` machinery stages; the
+        static kernel analyzer (:mod:`repro.verify.kernels`) recomputes it
+        from the captured block shapes and pins the two against each other
+        via ``working_set_words() == kernel_block_words() +
+        weight_scratch_words()``."""
+        prod_c = math.prod(self.block_contract)
+        x_tile = self.block_i * prod_c * (self.block_r if self.x_has_rank else 1)
+        f_tiles = sum(c * self.block_r for c in self.block_contract)
+        out = self.block_i * self.block_r
+        return x_tile + f_tiles + out
+
+    def weight_scratch_words(self) -> int:
+        """VMEM words of the Khatri-Rao weight block ``prod(bc) * br`` the
+        kernel builds in registers/VMEM each grid step — part of Eq 9 but
+        *not* a BlockSpec operand (it never touches HBM)."""
+        return math.prod(self.block_contract) * self.block_r
+
     def working_set_words(self, itemsize: int = 4) -> int:
         """VMEM words held per grid step (Eq 9 analogue): X tile + factor
         tiles + KRP block + output tile."""
         del itemsize  # word count is itemsize-free; kept for API stability
-        prod_c = math.prod(self.block_contract)
-        x_tile = self.block_i * prod_c * (self.block_r if self.x_has_rank else 1)
-        f_tiles = sum(c * self.block_r for c in self.block_contract)
-        krp = prod_c * self.block_r
-        out = self.block_i * self.block_r
-        return x_tile + f_tiles + krp + out
+        return self.kernel_block_words() + self.weight_scratch_words()
 
     def fits(self, memory: Memory) -> bool:
         """Eq-9 feasibility against an explicit memory descriptor."""
@@ -152,7 +167,7 @@ class BlockPlan:
 
     def traffic_model(
         self, shape: Sequence[int], rank: int, itemsize: int = 4
-    ) -> dict:
+    ) -> dict[str, int]:
         """Modeled HBM<->VMEM traffic of the kernel (bytes), mirroring the
         BlockSpec fetch rules: a block is re-fetched when its mapped index
         changes between consecutive grid steps.
@@ -235,7 +250,7 @@ def choose_blocks(
 
     bi = start(shape[0], sublane, 128)
     br = start(rank, lane, 512)
-    bc = []
+    bc: list[int] = []
     for d in range(1, n):
         if d == n - 1:  # minor dim: lane-aligned
             bc.append(start(shape[d], lane, 128))
@@ -293,13 +308,21 @@ def fused_pair_working_set_words(plan: BlockPlan) -> int:
     X tile + factor tiles + KRP weight + B^(0) tile + P tile — the
     mode-reuse schedule pays one extra output tile to avoid re-streaming
     the tensor once per mode."""
+    return fused_pair_kernel_block_words(plan) + plan.weight_scratch_words()
+
+
+def fused_pair_kernel_block_words(plan: BlockPlan) -> int:
+    """BlockSpec-operand share of :func:`fused_pair_working_set_words`:
+    X tile + factor tiles + B^(0) tile + P tile, excluding the in-kernel
+    KRP weight scratch (``plan.weight_scratch_words()``).  The static
+    kernel analyzer pins the fused pair kernel's captured block shapes
+    against this claim."""
     prod_c = math.prod(plan.block_contract)
     x_tile = plan.block_i * prod_c
     f_tiles = sum(c * plan.block_r for c in plan.block_contract)
-    krp = prod_c * plan.block_r
     b0_tile = plan.block_i * plan.block_r
     p_tile = plan.block_i * math.prod(plan.block_contract[:-1]) * plan.block_r
-    return x_tile + f_tiles + krp + b0_tile + p_tile
+    return x_tile + f_tiles + b0_tile + p_tile
 
 
 def choose_sweep_blocks(
@@ -388,17 +411,30 @@ class MultiTTMPlan:
     ranks: tuple[int, ...]
 
     # -- Eq 9 analog: working set -----------------------------------------
-    def working_set_words(self) -> int:
-        """Fast-memory words per grid step: tensor tile + matrix tiles +
-        Kronecker weight block + output tile (the Multi-TTM Eq-9 analog;
-        uniform-b form in ``core.bounds.multi_ttm_blocked_feasible_b``)."""
+    def kernel_block_words(self) -> int:
+        """Fast-memory words of the kernel's BlockSpec operand tiles alone:
+        tensor tile + matrix tiles + output tile.  The Kronecker weight
+        block is in-kernel scratch (:meth:`weight_scratch_words`); the
+        static kernel analyzer pins the captured block shapes against this
+        claim."""
         prod_c = math.prod(self.block_contract)
         prod_r = math.prod(self.ranks)
         x_tile = self.block_i * prod_c
         m_tiles = sum(c * r for c, r in zip(self.block_contract, self.ranks))
-        kron = prod_c * prod_r
         out = self.block_i * prod_r
-        return x_tile + m_tiles + kron + out
+        return x_tile + m_tiles + out
+
+    def weight_scratch_words(self) -> int:
+        """Fast-memory words of the Kronecker weight block
+        ``prod(bc) * prod(R_d)`` built in VMEM each grid step (never
+        materialized in HBM)."""
+        return math.prod(self.block_contract) * math.prod(self.ranks)
+
+    def working_set_words(self) -> int:
+        """Fast-memory words per grid step: tensor tile + matrix tiles +
+        Kronecker weight block + output tile (the Multi-TTM Eq-9 analog;
+        uniform-b form in ``core.bounds.multi_ttm_blocked_feasible_b``)."""
+        return self.kernel_block_words() + self.weight_scratch_words()
 
     def fits(self, memory: Memory) -> bool:
         return self.working_set_words() * memory.itemsize <= memory.budget_bytes
@@ -436,7 +472,9 @@ class MultiTTMPlan:
         ) + 2 * self.block_i * math.prod(self.ranks)
         return math.prod(shape) + nblocks * per_block
 
-    def traffic_model(self, shape: Sequence[int], itemsize: int = 4) -> dict:
+    def traffic_model(
+        self, shape: Sequence[int], itemsize: int = 4
+    ) -> dict[str, int]:
         """Modeled HBM<->VMEM traffic (bytes) of the Multi-TTM kernel,
         mirroring its BlockSpec fetch rules: grid (i, c_1..c_k), c
         innermost; the tensor is streamed once; matrix d is re-fetched
@@ -499,7 +537,7 @@ def choose_multi_ttm_blocks(
         return max(1, extent) if extent <= unit else unit
 
     bi = start(shape[0], sublane, 128)
-    bc = []
+    bc: list[int] = []
     for d in range(1, n):
         if d == n - 1:
             bc.append(start(shape[d], lane, 128))
@@ -557,7 +595,7 @@ def uniform_multi_ttm_plan(
 
 def mttkrp_traffic_model(
     shape: Sequence[int], rank: int, plan: BlockPlan, itemsize: int = 4
-) -> dict:
+) -> dict[str, int]:
     """Back-compat functional spelling of :meth:`BlockPlan.traffic_model`."""
     return plan.traffic_model(shape, rank, itemsize)
 

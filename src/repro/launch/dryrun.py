@@ -82,7 +82,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from ..configs import cell_is_skipped, get_config
-    from ..distributed.hlo import parse_collectives
     from ..models import (
         cache_specs,
         init_decode_state,
@@ -90,7 +89,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         param_specs,
     )
     from ..models.config import SHAPES
-    from ..models.model import DTYPES, decode_step, forward
+    from ..models.model import decode_step, forward
     from ..models.sharding import make_policy
     from ..training.steps import (
         batch_specs,
@@ -145,10 +144,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         active_params=cfg.active_param_count(),
     )
     key = jax.random.PRNGKey(0)
-    to_sh = lambda tree: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), tree,
-        is_leaf=lambda x: isinstance(x, P),
-    )
+    def to_sh(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
     t0 = time.time()
 
     if shape.kind == "train":

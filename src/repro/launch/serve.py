@@ -30,7 +30,6 @@ def main():
 
     from ..configs import get_config, get_smoke
     from ..models import decode_step, init_decode_state, init_params
-    from ..models.model import forward
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(0)

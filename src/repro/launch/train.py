@@ -15,7 +15,6 @@ same code paths the dry-run proves out at 256/512 devices).
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 
@@ -66,7 +65,8 @@ def main():
     n_params = sum(x.size for x in jax.tree.leaves(state.params))
     print(f"arch={cfg.name} params={n_params:,} devices={len(jax.devices())}")
 
-    lr_fn = lambda s: cosine_schedule(s, args.lr, 20, args.steps)
+    def lr_fn(s):
+        return cosine_schedule(s, args.lr, 20, args.steps)
     step = jax.jit(
         build_train_step(
             cfg, sh, microbatches=args.microbatches, lr_fn=lr_fn
@@ -86,7 +86,6 @@ def main():
     t0 = time.time()
     state, stats = loop.run(state)
     dt = time.time() - t0
-    n = max(len(stats.losses), 1)
     print(
         f"done: {stats.steps_done} steps in {dt:.1f}s "
         f"({dt / max(stats.steps_done, 1):.3f}s/step), "

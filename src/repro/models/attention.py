@@ -176,7 +176,7 @@ def flash_attention(
         q_blk, posq = qi  # (b, qc, h, hd), (b, qc)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, denom, acc = carry
             k_blk, v_blk, posk = ki
             if groups > 1:  # expand KV per chunk (head axis TP-shardable)
                 k_blk = jnp.repeat(k_blk, groups, axis=2)
@@ -193,22 +193,22 @@ def flash_attention(
                 # exactly zero — exp(-1e30 - (-1e30)) would give 1
                 p = p * mask.astype(p.dtype)
             corr = jnp.exp(m - m_new)
-            l_new = corr * l + jnp.sum(p, axis=-1)
+            denom_new = corr * denom + jnp.sum(p, axis=-1)
             pv = jnp.einsum(
                 "bhqs,bshk->bqhk", p.astype(v_blk.dtype), v_blk
             ).astype(jnp.float32)
             acc_new = corr.transpose(0, 2, 1)[..., None] * acc + pv
-            return (m_new, l_new, acc_new), None
+            return (m_new, denom_new, acc_new), None
 
         m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
-        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        d0 = jnp.zeros((b, h, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
+        (m, denom, acc), _ = jax.lax.scan(
+            kv_step, (m0, d0, a0),
             (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
              kv_pos),
         )
-        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        out = acc / jnp.maximum(denom, 1e-30).transpose(0, 2, 1)[..., None]
         return None, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(

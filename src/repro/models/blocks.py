@@ -11,14 +11,12 @@ scale (MaxText-style).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from .attention import (
-    KVCache,
     attention,
     attention_decode,
     attention_prefill,
@@ -30,7 +28,6 @@ from .layers import apply_mlp, apply_norm, init_mlp, init_norm
 from .moe import apply_moe, init_moe
 from .sharding import NULL, Sharding
 from .ssm import (
-    SSMCache,
     apply_ssm,
     apply_ssm_decode,
     init_ssm,
@@ -137,7 +134,7 @@ def init_stack(key, cfg: ArchConfig, dtype, n_layers: int | None = None,
             )
         positions.append(
             jax.tree.map(lambda *ls: jnp.stack(ls), *reps)
-            if n_groups > 1 else jax.tree.map(lambda l: l[None], reps[0])
+            if n_groups > 1 else jax.tree.map(lambda a: a[None], reps[0])
         )
     return positions  # list (period) of pytrees with leading n_groups dim
 
@@ -203,8 +200,8 @@ def init_stack_cache(
             c = init_ssm_cache(cfg, batch, dtype)
         caches.append(
             jax.tree.map(
-                lambda l: jnp.broadcast_to(
-                    l[None], (n_groups,) + l.shape
+                lambda a: jnp.broadcast_to(
+                    a[None], (n_groups,) + a.shape
                 ).copy(),
                 c,
             )

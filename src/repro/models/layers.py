@@ -5,7 +5,6 @@ sensitive, bf16 elsewhere (dtype policy from the config)."""
 from __future__ import annotations
 
 import math
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ parameter PartitionSpec generation for the production meshes."""
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -12,13 +11,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
-from .attention import attention_prefill, init_attn
 from .blocks import (
     apply_stack,
     apply_stack_decode,
     init_stack,
     init_stack_cache,
-    layer_kind,
 )
 from .config import ArchConfig
 from .layers import (

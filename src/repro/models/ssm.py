@@ -24,14 +24,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .config import ArchConfig
+from .layers import dense_init
+from .sharding import NULL, Sharding
+
 # §Perf hillclimb lever (EXPERIMENTS.md): lean SSD — bf16 decay tensors +
 # 3-operand einsums that avoid materializing the (B,nc,q,H,N) Δ-scaled
 # factors. Off by default (baseline = paper-faithful einsum SSD).
 _LEAN = os.environ.get("REPRO_SSD_LEAN") == "1"
-
-from .config import ArchConfig
-from .layers import dense_init
-from .sharding import NULL, Sharding
 
 
 class SSMCache(NamedTuple):

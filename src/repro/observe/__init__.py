@@ -8,8 +8,9 @@ The observability layer threaded through every engine dispatch (see
   ``ExecutionContext.observe`` / the trace's ``capture`` policy.
 * :class:`~repro.observe.metrics.MetricsRegistry` (via
   :func:`~repro.observe.metrics.registry`) — process-local counters /
-  gauges / histograms; absorbs the old ``pallas_dispatch_count()``
-  global behind snapshot-based reads.
+  gauges / histograms; the one home of the kernel-dispatch counter
+  (the old ``pallas_dispatch_count()`` shim is gone), read via
+  snapshot-based deltas.
 * :mod:`~repro.observe.bounds_audit` — measured-bytes / modeled-words /
   lower-bound triples per compiled dispatch (the paper's claim as a
   runtime metric).

@@ -25,8 +25,9 @@ instead of the old reset-the-global-between-measurements footgun (two
 interleaved measurements used to corrupt each other; snapshots are
 immutable, so they cannot).
 
-The old ``repro.engine.execute.pallas_dispatch_count()`` survives for one
-release as a :class:`DeprecationWarning` shim over the registry.
+The old ``repro.engine.execute.pallas_dispatch_count()`` shim has been
+removed; the registry is the only spelling (a ``repro.verify`` lint rule,
+RV106, forbids reintroducing it).
 """
 
 from __future__ import annotations

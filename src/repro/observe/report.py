@@ -36,6 +36,7 @@ DISPATCH_KINDS = (
     "cp_sweep_collectives",
     "tucker_sweep_collectives",
     "bounds_audit",
+    "static_verify",
 )
 
 

@@ -16,9 +16,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
-import jax
 import numpy as np
 
 from ..checkpoint import CheckpointManager

@@ -18,7 +18,6 @@ single-pod and multi-pod production meshes and the dry-run.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -30,7 +29,6 @@ from ..models import (
     Sharding,
     cache_specs,
     decode_step,
-    init_decode_state,
     init_params,
     loss_fn,
     param_specs,
@@ -167,10 +165,11 @@ def jit_train_step(cfg: ArchConfig, sh: Sharding, state: TrainState,
         return jax.jit(step)
     sspecs = train_state_specs(state, cfg, sh)
     bspecs = batch_specs(cfg, sh)
-    to_sharding = lambda tree: jax.tree.map(
-        lambda s: NamedSharding(sh.mesh, s), tree,
-        is_leaf=lambda x: isinstance(x, P),
-    )
+    def to_sharding(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(sh.mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
     return jax.jit(
         step,
         in_shardings=(to_sharding(sspecs), to_sharding(bspecs)),
@@ -185,10 +184,11 @@ def jit_serve_step(cfg: ArchConfig, sh: Sharding, params, decode_state):
         return jax.jit(step)
     pspecs = param_specs(params, cfg, sh)
     cspecs = cache_specs(decode_state, cfg, sh)
-    to_sharding = lambda tree: jax.tree.map(
-        lambda s: NamedSharding(sh.mesh, s), tree,
-        is_leaf=lambda x: isinstance(x, P),
-    )
+    def to_sharding(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(sh.mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
     tok_sharding = NamedSharding(sh.mesh, sh.spec("dp", None))
     return jax.jit(
         step,

@@ -214,12 +214,14 @@ def calibrate(
     for r in rows:
         r.predicted_us = cal.predict_us(r.model_bytes)
     if persist:
-        (cache or default_cache()).put_calibration(cal.to_dict())
+        dest = default_cache() if cache is None else cache
+        dest.put_calibration(cal.to_dict())
     return cal
 
 
 def load_calibration(cache: PlanCache | None = None) -> Calibration | None:
-    d = (cache or default_cache()).get_calibration()
+    src = default_cache() if cache is None else cache
+    d = src.get_calibration()
     return Calibration.from_dict(d) if d else None
 
 

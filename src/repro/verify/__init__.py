@@ -1,0 +1,61 @@
+"""Static verification: prove the paper's invariants without running anything.
+
+Three analyzers, one :class:`Finding` currency, one CLI
+(``python -m repro.verify``):
+
+* :mod:`repro.verify.plans` — pure arithmetic over
+  :class:`~repro.engine.plan.BlockPlan` / ``MultiTTMPlan`` objects: Eq-9
+  working-set feasibility, block-divisibility/padding consistency,
+  dtype-aware itemsize propagation, and the Eq-10-vs-Thm-4.1 sandwich,
+  swept over a shape x rank x Memory lattice so ``choose_blocks`` /
+  ``choose_multi_ttm_blocks`` / ``choose_sweep_blocks`` are proven never
+  to emit an infeasible plan.
+* :mod:`repro.verify.kernels` — captures every Pallas kernel's grid +
+  BlockSpecs by monkeypatching ``pallas_call`` under ``jax.eval_shape``
+  (the kernel body never executes), then evaluates the index maps over
+  the full grid to prove output coverage, in-bounds block origins,
+  accumulation-run contiguity, fp32 accumulator dtype, and that the VMEM
+  block footprint equals the planner's
+  :meth:`~repro.engine.plan.BlockPlan.kernel_block_words` claim.
+* :mod:`repro.verify.lint` — AST rules encoding repo-specific bug
+  classes (the PR-6 falsy-``PlanCache`` bug, tracer-unsafe branching,
+  jax imports in the pure-math modules, mutable defaults, wall-clock
+  calls in deterministic layers, reintroduction of the removed
+  ``pallas_dispatch_count`` shim).
+
+This is the *static* half of the observability story: the dynamic half
+(:mod:`repro.observe.bounds_audit`) measures compiled HLO; this package
+proves what can be proven before compilation, and its verdicts ride the
+same trace schema (``kind="static_verify"``) so the report CLI tables
+them next to measured audit rows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One static-analysis violation: which analyzer, which rule, where.
+
+    ``analyzer`` is ``"plans"`` / ``"kernels"`` / ``"lint"``; ``rule`` is
+    the stable rule code (e.g. ``"eq9-infeasible"``, ``"RV101"``);
+    ``subject`` names the object (a plan/kernel description or a
+    ``file:line`` location); ``detail`` is the human-readable evidence.
+    """
+
+    analyzer: str
+    rule: str
+    subject: str
+    detail: str
+
+    def to_dict(self) -> dict:
+        """Plain-dict form for JSONL trace events and test assertions."""
+        return asdict(self)
+
+    def __str__(self) -> str:
+        return f"[{self.analyzer}:{self.rule}] {self.subject}: {self.detail}"
+
+
+__all__ = ["Finding"]

@@ -1,0 +1,123 @@
+"""``python -m repro.verify`` — the static verification gate.
+
+Runs the three analyzers (plan verifier, kernel static analyzer, repo
+lint) and exits nonzero on any finding, so CI can gate on it::
+
+    PYTHONPATH=src python -m repro.verify             # all analyzers
+    PYTHONPATH=src python -m repro.verify --only lint  # subset
+    PYTHONPATH=src python -m repro.verify --rules      # lint catalog
+    PYTHONPATH=src python -m repro.verify --trace-out v.jsonl
+
+``--trace-out`` records one ``kind="static_verify"`` span event per
+kernel verdict plus one summary event, in the standard
+``repro.observe.Span/1`` schema, so ``python -m repro.observe.report``
+tables static verdicts next to measured bounds-audit rows.
+
+Exit status: 0 = clean; 1 = at least one finding; 2 = bad usage.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import Finding
+
+ANALYZERS = ("plans", "kernels", "lint")
+
+
+def run(
+    only: tuple[str, ...] = ANALYZERS,
+    trace_out: str | None = None,
+) -> tuple[list[Finding], list[dict]]:
+    """Run the selected analyzers; returns (findings, kernel verdicts)
+    and optionally exports the verdicts as a JSONL trace."""
+    findings: list[Finding] = []
+    verdicts: list[dict] = []
+    if "plans" in only:
+        from .plans import verify_plans
+
+        findings += verify_plans()
+    if "kernels" in only:
+        from .kernels import verify_kernels
+
+        kf, verdicts = verify_kernels()
+        findings += kf
+    if "lint" in only:
+        from .lint import lint_tree
+
+        findings += lint_tree()
+    if trace_out is not None:
+        from ..observe.trace import Trace, record_event
+
+        with Trace(path=trace_out):
+            for v in verdicts:
+                record_event("static_verify", **v)
+            record_event(
+                "static_verify",
+                name="summary",
+                analyzers=list(only),
+                findings=len(findings),
+                kernels_checked=len(verdicts),
+                kernels_agreeing=sum(1 for v in verdicts if v["agrees"]),
+            )
+    return findings, verdicts
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.verify", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument(
+        "--only", default=None,
+        help=f"comma-separated analyzers to run "
+        f"(default: {','.join(ANALYZERS)})",
+    )
+    ap.add_argument(
+        "--rules", action="store_true",
+        help="print the lint rule catalog (markdown) and exit",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="FILE",
+        help="write kernel verdicts as kind=static_verify JSONL span "
+        "events (repro.observe schema)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        from .lint import rule_catalog
+
+        print(rule_catalog())
+        return 0
+
+    only = tuple(ANALYZERS)
+    if args.only:
+        only = tuple(a.strip() for a in args.only.split(",") if a.strip())
+        bad = [a for a in only if a not in ANALYZERS]
+        if bad:
+            print(
+                f"verify: unknown analyzer(s) {bad}; "
+                f"choose from {ANALYZERS}", file=sys.stderr,
+            )
+            return 2
+
+    findings, verdicts = run(only, trace_out=args.trace_out)
+    for f in findings:
+        print(f)
+    for v in verdicts:
+        mark = "ok" if v["agrees"] and not v["findings"] else "FAIL"
+        print(
+            f"kernel {v['name']}: grid={tuple(v['grid'])} "
+            f"footprint={v['footprint_words']}w "
+            f"claim={v['claimed_words']}w [{mark}]"
+        )
+    print(
+        f"verify: {len(findings)} finding(s) across "
+        f"{', '.join(only)}; {len(verdicts)} kernel(s) checked"
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,309 @@
+"""Repo-specific AST lint: the bug classes this codebase has shipped.
+
+Each rule encodes one *incident*, not a style preference:
+
+* **RV101 falsy-or-default** — ``cache or default_cache()`` silently
+  replaces an *empty* ``PlanCache``/``MetricsRegistry`` (they define
+  ``__len__``, so emptiness is falsy) with a fresh default — the PR-6
+  bug.  Spell it ``x if x is not None else default()``.
+* **RV102 tracer-branch** — a Python ``if``/``while`` on a value that
+  may be a jax tracer inside the ``engine/``/``kernels/`` hot paths
+  raises ``TracerBoolConversionError`` under jit; predicates that are
+  static (dtype inspection) are allowlisted.
+* **RV103 jax-in-pure-math** — ``core/bounds.py``, ``engine/plan.py``
+  and ``distributed/grid_select.py`` are the trace-free equation layer;
+  importing ``jax`` there would let tracers leak into the paper's
+  arithmetic (and break the mypy gate that types exactly these files).
+* **RV104 mutable-default** — ``def f(x=[])`` / ``def f(x=make())``
+  share one instance across calls (ruff's B006/B008, kept here so the
+  fixture-backed regression test exists even without ruff installed).
+* **RV105 wallclock** — ``time.*``/``datetime.now``/``random.*`` calls
+  outside the measurement layers (``tune``, ``observe``, ``launch``,
+  ``training``, ``checkpoint``, ``data``) make the numeric layers
+  nondeterministic; span timing in ``engine/execute.py`` and
+  ``engine/sweep.py`` is the one sanctioned exception.
+* **RV106 dispatch-count-shim** — ``pallas_dispatch_count`` was removed
+  (PR 7 deprecated it for one release); the counter lives in
+  ``MetricsRegistry``.  Defining or importing the old name anywhere in
+  ``src/`` reintroduces a dead API.
+
+A finding on a line carrying ``# verify: allow=<code>`` (or
+``allow=all``) is waived — the waiver is part of the diff, so
+exceptions are reviewable.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Sequence
+
+from . import Finding
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One lint rule: stable code, short name, what it catches and why."""
+
+    code: str
+    name: str
+    summary: str
+
+
+RULES: tuple[Rule, ...] = (
+    Rule(
+        "RV101", "falsy-or-default",
+        "`x or default()` on a cache/registry object: emptiness is falsy "
+        "(they define __len__), so an empty instance is silently replaced "
+        "by a fresh default (the PR-6 PlanCache bug). Use "
+        "`x if x is not None else default()`.",
+    ),
+    Rule(
+        "RV102", "tracer-branch",
+        "Python `if`/`while` on a possibly-traced jnp/jax value inside "
+        "engine/ or kernels/: raises TracerBoolConversionError under jit. "
+        "Static predicates (dtype inspection) are allowlisted.",
+    ),
+    Rule(
+        "RV103", "jax-in-pure-math",
+        "jax/jnp import in the pure equation layer (core/bounds.py, "
+        "engine/plan.py, distributed/grid_select.py): these modules must "
+        "stay trace-free, array-free, and fully typed.",
+    ),
+    Rule(
+        "RV104", "mutable-default",
+        "Mutable or call-valued default argument (list/dict/set literal "
+        "or constructor call): one shared instance across all calls.",
+    ),
+    Rule(
+        "RV105", "wallclock",
+        "time/datetime/random call outside the measurement layers: the "
+        "numeric/planning layers must be deterministic. Span timing in "
+        "engine/execute.py + engine/sweep.py is the sanctioned exception.",
+    ),
+    Rule(
+        "RV106", "dispatch-count-shim",
+        "pallas_dispatch_count was removed; the dispatch counter is "
+        "repro.observe.metrics.registry().counter('engine."
+        "pallas_dispatches'). Do not reintroduce the shim.",
+    ),
+)
+
+#: RV101: left operand names that look like stateful containers.
+_CONTAINERISH = ("cache", "registry", "buf", "trace")
+
+#: RV102: jnp/jax attributes whose results are static Python values even
+#: on traced operands (dtype/shape inspection, backend queries).
+_STATIC_SAFE_ATTRS = frozenset({
+    "dtype", "issubdtype", "result_type", "promote_types", "finfo",
+    "iinfo", "isscalar", "ndim", "shape", "size", "itemsize",
+    "canonicalize_dtype", "default_backend", "devices", "device_count",
+})
+
+#: RV102 scope: packages whose code runs under jit tracing.
+_TRACED_DIRS = ("engine", "kernels")
+
+#: RV103 scope: the pure equation layer (paths relative to src/repro).
+PURE_MODULES = frozenset({
+    "core/bounds.py", "engine/plan.py", "distributed/grid_select.py",
+})
+
+#: RV105: sanctioned nondeterminism — measurement/IO layers and the span
+#: timing inside the dispatch layer.
+_WALLCLOCK_DIRS = (
+    "tune", "observe", "launch", "training", "checkpoint", "data",
+    "benchmarks",
+)
+_WALLCLOCK_FILES = frozenset({"engine/execute.py", "engine/sweep.py"})
+_WALLCLOCK_CALLS = frozenset({
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("time", "process_time"), ("time", "time_ns"),
+    ("time", "perf_counter_ns"), ("datetime", "now"),
+    ("datetime", "utcnow"), ("datetime", "today"),
+    ("random", "random"), ("random", "randint"), ("random", "choice"),
+    ("random", "shuffle"), ("random", "uniform"), ("random", "seed"),
+})
+
+
+def rule_catalog() -> str:
+    """The rule catalog as a markdown table (printed by ``--rules`` and
+    into the CI job summary)."""
+    lines = ["| code | name | what it catches |", "|------|------|-----|"]
+    for r in RULES:
+        lines.append(f"| {r.code} | {r.name} | {r.summary} |")
+    return "\n".join(lines)
+
+
+def _attr_chain(node: ast.AST) -> tuple[str, ...]:
+    """`a.b.c` -> ("a", "b", "c"); empty when the root is not a Name."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _name_of(node: ast.AST) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ""
+
+
+def _in_dirs(relpath: str, dirs: Sequence[str]) -> bool:
+    top = relpath.split("/", 1)[0]
+    return top in dirs
+
+
+def _jnp_call_in(test: ast.AST) -> ast.Call | None:
+    """First jnp/jax call in the subtree that is not a static-safe
+    attribute access; None when the test is trace-safe."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if len(chain) >= 2 and chain[0] in ("jnp", "jax", "lax"):
+            if chain[-1] not in _STATIC_SAFE_ATTRS:
+                return node
+    return None
+
+
+def lint_source(src: str, relpath: str) -> list[Finding]:
+    """Run every rule over one module's source.  ``relpath`` is the
+    path relative to ``src/repro`` (posix separators) — several rules
+    are scoped by layer."""
+    try:
+        tree = ast.parse(src, filename=relpath)
+    except SyntaxError as e:
+        return [Finding("lint", "syntax", relpath, f"unparsable: {e}")]
+    lines = src.splitlines()
+    findings: list[Finding] = []
+
+    def waived(lineno: int, code: str) -> bool:
+        if 1 <= lineno <= len(lines):
+            text = lines[lineno - 1]
+            if "verify: allow=" in text:
+                allowed = text.split("verify: allow=", 1)[1].split()[0]
+                return code in allowed.split(",") or allowed == "all"
+        return False
+
+    def emit(code: str, node: ast.AST, detail: str) -> None:
+        lineno = getattr(node, "lineno", 0)
+        if not waived(lineno, code):
+            findings.append(Finding(
+                "lint", code, f"{relpath}:{lineno}", detail,
+            ))
+
+    pure = relpath in PURE_MODULES
+    traced = _in_dirs(relpath, _TRACED_DIRS)
+    clock_ok = (
+        _in_dirs(relpath, _WALLCLOCK_DIRS) or relpath in _WALLCLOCK_FILES
+    )
+
+    for node in ast.walk(tree):
+        # RV101 -------------------------------------------------------
+        if isinstance(node, ast.BoolOp) and isinstance(node.op, ast.Or):
+            left = node.values[0]
+            lname = _name_of(left).lower()
+            if any(c in lname for c in _CONTAINERISH) and any(
+                isinstance(v, ast.Call) for v in node.values[1:]
+            ):
+                emit(
+                    "RV101", node,
+                    f"`{_name_of(left)} or <call>` treats an EMPTY "
+                    f"{_name_of(left)} as absent (it defines __len__); "
+                    f"use `{_name_of(left)} if {_name_of(left)} is not "
+                    f"None else <call>`",
+                )
+        # RV102 -------------------------------------------------------
+        if traced and isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            call = _jnp_call_in(node.test)
+            if call is not None:
+                chain = ".".join(_attr_chain(call.func))
+                emit(
+                    "RV102", node,
+                    f"branching on `{chain}(...)`: under jit this value "
+                    f"is a tracer and bool() raises; hoist the decision "
+                    f"or use lax.cond",
+                )
+        # RV103 -------------------------------------------------------
+        if pure and isinstance(node, (ast.Import, ast.ImportFrom)):
+            mods = (
+                [a.name for a in node.names]
+                if isinstance(node, ast.Import)
+                else [node.module or ""]
+            )
+            for m in mods:
+                if m == "jax" or m.startswith("jax."):
+                    emit(
+                        "RV103", node,
+                        f"`import {m}` in the pure equation layer; this "
+                        f"module must stay trace-free",
+                    )
+        # RV104 -------------------------------------------------------
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            for default in list(args.defaults) + [
+                d for d in args.kw_defaults if d is not None
+            ]:
+                if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                    emit(
+                        "RV104", default,
+                        f"mutable default argument in `{node.name}`: one "
+                        f"instance is shared across every call",
+                    )
+                elif isinstance(default, ast.Call):
+                    emit(
+                        "RV104", default,
+                        f"call-valued default argument in `{node.name}`: "
+                        f"evaluated once at def time, shared across calls",
+                    )
+        # RV105 -------------------------------------------------------
+        if not clock_ok and isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if len(chain) >= 2 and (chain[-2], chain[-1]) in \
+                    _WALLCLOCK_CALLS:
+                emit(
+                    "RV105", node,
+                    f"`{'.'.join(chain)}()` outside the measurement "
+                    f"layers: this layer must be deterministic",
+                )
+        # RV106 -------------------------------------------------------
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == "pallas_dispatch_count":
+            emit(
+                "RV106", node,
+                "pallas_dispatch_count was removed; use "
+                "repro.observe.metrics.registry()",
+            )
+        if isinstance(node, ast.ImportFrom) and any(
+            a.name == "pallas_dispatch_count" for a in node.names
+        ):
+            emit(
+                "RV106", node,
+                "importing the removed pallas_dispatch_count shim",
+            )
+    return findings
+
+
+def iter_module_paths(root: Path) -> Iterable[tuple[Path, str]]:
+    """Yield ``(path, relpath)`` for every Python module under the
+    package root (``src/repro``), relpath posix-style."""
+    for path in sorted(root.rglob("*.py")):
+        yield path, path.relative_to(root).as_posix()
+
+
+def lint_tree(root: Path | None = None) -> list[Finding]:
+    """Lint every module of the installed ``repro`` package (or an
+    explicit package root)."""
+    if root is None:
+        root = Path(__file__).resolve().parent.parent
+    findings: list[Finding] = []
+    for path, relpath in iter_module_paths(Path(root)):
+        findings += lint_source(path.read_text(), relpath)
+    return findings

@@ -1,0 +1,326 @@
+"""Static plan verification: pure arithmetic over plan objects, no arrays.
+
+Every check here is a statement the paper makes about a *plan* — not
+about an execution — so it can be proven by evaluating the plan's own
+methods against a :class:`~repro.engine.plan.Memory` descriptor:
+
+* **Eq 9 (working set)** — ``plan.working_set_words() * itemsize`` must
+  fit ``memory.budget_bytes``.  A plan is only *charged* as infeasible
+  when a feasible plan exists at all (the all-ones plan fits); a memory
+  too small for any plan is a property of the memory, not a planner bug.
+* **Decomposition** — ``working_set_words == kernel_block_words +
+  weight_scratch_words``: the split the static kernel analyzer
+  (:mod:`repro.verify.kernels`) pins BlockSpec footprints against.
+* **Padding/divisibility** — ``padded_shape`` must be the minimal
+  block-multiple cover of the shape, and ``grid`` must tile it exactly.
+* **Eq 10 vs Thm 4.1** — a feasible plan's modeled traffic
+  (``eq10_words`` / ``model_words``) can never undercut the sequential
+  memory-dependent lower bound (``seq_lb_memory`` /
+  ``multi_ttm_seq_lb_memory``, clamped at 0).
+* **Itemsize propagation** — ``Memory.with_itemsize`` re-describes the
+  same physical bytes: ``budget_bytes`` invariant, ``budget_words``
+  scaling as ``bytes // itemsize``.
+
+:func:`verify_plans` sweeps a shape x rank x Memory x itemsize lattice
+through ``choose_blocks`` / ``choose_sweep_blocks`` /
+``choose_multi_ttm_blocks`` / ``best_uniform_block`` and applies the
+checks to every emitted plan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from ..core.bounds import multi_ttm_seq_lb_memory, seq_lb_memory
+from ..engine.plan import (
+    BlockPlan,
+    Memory,
+    MultiTTMPlan,
+    best_uniform_block,
+    choose_blocks,
+    choose_multi_ttm_blocks,
+    choose_sweep_blocks,
+    fused_pair_kernel_block_words,
+    fused_pair_working_set_words,
+    uniform_block_feasible,
+)
+from . import Finding
+
+#: The default verification lattice: shapes cover 3-/4-way, degenerate
+#: (sub-alignment) extents, and MXU-sized problems; memories cover real
+#: VMEM at two itemsizes plus abstract word budgets from starved to ample.
+DEFAULT_SHAPES: tuple[tuple[int, ...], ...] = (
+    (24, 10, 12),
+    (64, 64, 64),
+    (128, 32, 8),
+    (7, 5, 3),
+    (200, 3, 130),
+    (16, 8, 6, 4),
+)
+DEFAULT_RANKS: tuple[int, ...] = (1, 4, 16, 64)
+DEFAULT_MEMORIES: tuple[Memory, ...] = (
+    Memory.tpu_vmem(itemsize=4),
+    Memory.tpu_vmem(itemsize=2),
+    Memory.abstract(100),
+    Memory.abstract(512),
+    Memory.abstract(4096),
+    Memory.abstract(2 ** 16),
+)
+
+
+def _subject(kind: str, plan: object, shape: Sequence[int], extra: str = "") -> str:
+    return f"{kind}[shape={tuple(shape)}{extra}] {plan!r}"
+
+
+def check_block_plan(
+    plan: BlockPlan,
+    shape: Sequence[int],
+    rank: int,
+    memory: Memory,
+) -> list[Finding]:
+    """All static checks for one :class:`BlockPlan` against one Memory."""
+    out: list[Finding] = []
+    sub = _subject("BlockPlan", plan, shape, f",rank={rank}")
+
+    blocks = plan.blocks_per_mode()
+    if plan.block_r < 1 or any(b < 1 for b in blocks):
+        out.append(Finding(
+            "plans", "nonpositive-block", sub,
+            f"block sizes must be >= 1, got {blocks} / br={plan.block_r}",
+        ))
+        return out  # everything below divides by the blocks
+
+    # Eq 9: only charge infeasibility when a feasible plan exists at all.
+    if not plan.fits(memory):
+        minimal = BlockPlan(
+            1, (1,) * len(plan.block_contract), 1, plan.x_has_rank
+        )
+        if minimal.fits(memory):
+            out.append(Finding(
+                "plans", "eq9-infeasible", sub,
+                f"working set {plan.working_set_words()} words exceeds "
+                f"budget {memory.budget_words} words while the all-ones "
+                f"plan fits (Eq 9 violated by choice, not by necessity)",
+            ))
+
+    # working-set decomposition (the kernel analyzer's pin).
+    ws = plan.working_set_words()
+    parts = plan.kernel_block_words() + plan.weight_scratch_words()
+    if ws != parts:
+        out.append(Finding(
+            "plans", "ws-decomposition", sub,
+            f"working_set_words()={ws} != kernel_block_words + "
+            f"weight_scratch_words = {parts}",
+        ))
+
+    # padding: minimal block-multiple cover.
+    padded = plan.padded_shape(shape)
+    for d, (s, p, b) in enumerate(zip(shape, padded, blocks)):
+        if p % b != 0 or p < s or p - s >= b:
+            out.append(Finding(
+                "plans", "padding", sub,
+                f"mode {d}: padded extent {p} is not the minimal "
+                f"multiple of block {b} covering {s}",
+            ))
+
+    # grid: exact tiling of the padded problem (plus the rank tile).
+    grid = plan.grid(shape, rank)
+    r_pad = math.ceil(rank / plan.block_r) * plan.block_r
+    want = (r_pad // plan.block_r,) + tuple(
+        p // b for p, b in zip(padded, blocks)
+    )
+    if grid != want or any(g < 1 for g in grid):
+        out.append(Finding(
+            "plans", "grid", sub,
+            f"grid {grid} does not tile padded shape {padded} "
+            f"(+rank {rank}->{r_pad}); expected {want}",
+        ))
+
+    # Eq 10 >= Thm 4.1 (only meaningful for plans that satisfy Eq 9).
+    if plan.fits(memory):
+        lb = max(seq_lb_memory(shape, rank, memory.budget_words), 0.0)
+        eq10 = plan.eq10_words(shape, rank)
+        if eq10 < lb:
+            out.append(Finding(
+                "plans", "eq10-below-bound", sub,
+                f"modeled traffic {eq10} words undercuts the Thm-4.1 "
+                f"sequential lower bound {lb:.0f} words at "
+                f"M={memory.budget_words}",
+            ))
+    return out
+
+
+def check_sweep_plan(
+    plan: BlockPlan,
+    shape: Sequence[int],
+    rank: int,
+    memory: Memory,
+) -> list[Finding]:
+    """Checks for a fused-pair sweep plan: everything a plain plan must
+    satisfy, plus the *fused* working set (B^(0) and P tiles resident
+    together) fitting the budget, with the same decomposition pin."""
+    out = check_block_plan(plan, shape, rank, memory)
+    sub = _subject("SweepPlan", plan, shape, f",rank={rank}")
+    fused = fused_pair_working_set_words(plan)
+    if fused * memory.itemsize > memory.budget_bytes:
+        minimal = BlockPlan(1, (1,) * len(plan.block_contract), 1)
+        if fused_pair_working_set_words(minimal) * memory.itemsize \
+                <= memory.budget_bytes:
+            out.append(Finding(
+                "plans", "eq9-infeasible-fused", sub,
+                f"fused working set {fused} words exceeds budget "
+                f"{memory.budget_words} words while the all-ones plan fits",
+            ))
+    parts = fused_pair_kernel_block_words(plan) + plan.weight_scratch_words()
+    if fused != parts:
+        out.append(Finding(
+            "plans", "ws-decomposition", sub,
+            f"fused_pair_working_set_words={fused} != "
+            f"fused_pair_kernel_block_words + weight_scratch_words = {parts}",
+        ))
+    return out
+
+
+def check_multi_ttm_plan(
+    plan: MultiTTMPlan,
+    shape: Sequence[int],
+    ranks: Sequence[int],
+    memory: Memory,
+) -> list[Finding]:
+    """All static checks for one :class:`MultiTTMPlan` (the Eq-9/Eq-10
+    analogs of arXiv:2207.10437) against one Memory."""
+    out: list[Finding] = []
+    sub = _subject("MultiTTMPlan", plan, shape, f",ranks={tuple(ranks)}")
+
+    blocks = plan.blocks_per_mode()
+    if any(b < 1 for b in blocks) or any(r < 1 for r in plan.ranks):
+        out.append(Finding(
+            "plans", "nonpositive-block", sub,
+            f"block sizes/ranks must be >= 1, got {blocks} / {plan.ranks}",
+        ))
+        return out
+
+    if not plan.fits(memory):
+        minimal = MultiTTMPlan(
+            1, (1,) * len(plan.block_contract), plan.ranks
+        )
+        if minimal.fits(memory):
+            out.append(Finding(
+                "plans", "eq9-infeasible", sub,
+                f"working set {plan.working_set_words()} words exceeds "
+                f"budget {memory.budget_words} words while the all-ones "
+                f"plan fits",
+            ))
+
+    ws = plan.working_set_words()
+    parts = plan.kernel_block_words() + plan.weight_scratch_words()
+    if ws != parts:
+        out.append(Finding(
+            "plans", "ws-decomposition", sub,
+            f"working_set_words()={ws} != kernel_block_words + "
+            f"weight_scratch_words = {parts}",
+        ))
+
+    padded = plan.padded_shape(shape)
+    for d, (s, p, b) in enumerate(zip(shape, padded, blocks)):
+        if p % b != 0 or p < s or p - s >= b:
+            out.append(Finding(
+                "plans", "padding", sub,
+                f"mode {d}: padded extent {p} is not the minimal "
+                f"multiple of block {b} covering {s}",
+            ))
+
+    grid = plan.grid(shape)
+    want = tuple(p // b for p, b in zip(padded, blocks))
+    if grid != want or any(g < 1 for g in grid):
+        out.append(Finding(
+            "plans", "grid", sub,
+            f"grid {grid} does not tile padded shape {padded}; "
+            f"expected {want}",
+        ))
+
+    if plan.fits(memory):
+        lb = max(
+            multi_ttm_seq_lb_memory(shape, ranks, memory.budget_words), 0.0
+        )
+        model = plan.model_words(shape)
+        if model < lb:
+            out.append(Finding(
+                "plans", "eq10-below-bound", sub,
+                f"modeled traffic {model} words undercuts the Multi-TTM "
+                f"sequential lower bound {lb:.0f} words at "
+                f"M={memory.budget_words}",
+            ))
+    return out
+
+
+def check_memory_itemsize(memory: Memory) -> list[Finding]:
+    """Dtype-aware itemsize propagation: ``with_itemsize`` re-describes
+    the same physical budget — bytes invariant, words = bytes // size."""
+    out: list[Finding] = []
+    for itemsize in (1, 2, 4, 8):
+        m2 = memory.with_itemsize(itemsize)
+        if m2.budget_bytes != memory.budget_bytes:
+            out.append(Finding(
+                "plans", "itemsize-propagation", repr(memory),
+                f"with_itemsize({itemsize}) changed budget_bytes "
+                f"{memory.budget_bytes} -> {m2.budget_bytes}",
+            ))
+        if m2.budget_words != memory.budget_bytes // itemsize:
+            out.append(Finding(
+                "plans", "itemsize-propagation", repr(memory),
+                f"with_itemsize({itemsize}).budget_words = "
+                f"{m2.budget_words}, expected "
+                f"{memory.budget_bytes // itemsize}",
+            ))
+    return out
+
+
+def _tucker_ranks(shape: Sequence[int]) -> tuple[int, ...]:
+    return tuple(min(4, max(1, s // 2)) for s in shape[1:])
+
+
+def verify_plans(
+    shapes: Sequence[Sequence[int]] = DEFAULT_SHAPES,
+    ranks: Sequence[int] = DEFAULT_RANKS,
+    memories: Sequence[Memory] = DEFAULT_MEMORIES,
+) -> list[Finding]:
+    """Sweep the planners over the lattice and statically check every
+    emitted plan (pure arithmetic — no arrays are ever built)."""
+    findings: list[Finding] = []
+    for memory in memories:
+        findings += check_memory_itemsize(memory)
+    for shape in shapes:
+        shape = tuple(shape)
+        for memory in memories:
+            itemsize = memory.itemsize
+            for rank in ranks:
+                plan = choose_blocks(
+                    shape, rank, itemsize, memory=memory
+                )
+                findings += check_block_plan(plan, shape, rank, memory)
+                aug = choose_blocks(
+                    shape, rank, itemsize, memory=memory, x_has_rank=True
+                )
+                findings += check_block_plan(aug, shape, rank, memory)
+                sweep = choose_sweep_blocks(
+                    shape, rank, itemsize, memory=memory
+                )
+                findings += check_sweep_plan(sweep, shape, rank, memory)
+                b = best_uniform_block(shape, memory)
+                if b >= 1 and not uniform_block_feasible(
+                    len(shape), b, memory
+                ):
+                    findings.append(Finding(
+                        "plans", "uniform-infeasible",
+                        f"uniform[shape={shape},rank={rank}] b={b}",
+                        f"best_uniform_block returned b={b} but Eq 9 "
+                        f"rejects it at M={memory.budget_words}",
+                    ))
+            tranks = _tucker_ranks(shape)
+            tplan = choose_multi_ttm_blocks(
+                shape, tranks, itemsize, memory=memory
+            )
+            findings += check_multi_ttm_plan(tplan, shape, tranks, memory)
+    return findings

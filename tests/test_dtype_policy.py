@@ -4,7 +4,6 @@ ExecutionContext serialization of the new knobs."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.cp_als import cp_als

@@ -7,7 +7,6 @@ fusion byte accounting primitives.
 
 import jax
 import jax.numpy as jnp
-import pytest
 from dataclasses import replace
 
 from repro.analysis.hlo_cost import (
@@ -27,7 +26,9 @@ def _compile_loss(cfg, grad=False):
         "tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
         "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32),
     }
-    fn = lambda p, b: loss_fn(p, cfg, b)[0]
+    def fn(p, b):
+        return loss_fn(p, cfg, b)[0]
+
     if grad:
         fn = jax.grad(fn)
     return jax.jit(fn).lower(params, batch).compile()

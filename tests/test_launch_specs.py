@@ -10,7 +10,6 @@ import pytest
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.specs import (
-    batch_struct,
     cross_kv_struct,
     decode_token_struct,
     input_specs,

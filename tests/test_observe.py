@@ -2,13 +2,10 @@
 bounds-audit triples, the zero-overhead observe=False contract, and the
 report CLI (ISSUE PR 7 acceptance)."""
 
-import dataclasses
 import json
-import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 import repro
@@ -221,14 +218,16 @@ def test_tune_cache_counters():
         assert TUNE_CACHE_HITS not in delta
 
 
-def test_pallas_dispatch_count_shim_warns():
-    from repro.engine.execute import pallas_dispatch_count
+def test_pallas_dispatch_count_shim_removed():
+    """The deprecated shim is gone: the registry counter is the only
+    spelling (repro.verify rule RV106 keeps it that way)."""
+    import repro.engine
+    import repro.engine.execute as execute
 
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        n = pallas_dispatch_count()
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert n == registry().counter(PALLAS_DISPATCHES)
+    assert not hasattr(execute, "pallas_dispatch_count")
+    assert "pallas_dispatch_count" not in repro.engine.__all__
+    with pytest.raises(ImportError):
+        from repro.engine.execute import pallas_dispatch_count  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

@@ -89,8 +89,6 @@ def test_causality():
 
 def test_matches_model_ssd_intra_term():
     """The kernel computes exactly models/ssm.py's y_intra term."""
-    from repro.configs import get_smoke
-    from repro.models.ssm import apply_ssm, init_ssm
 
     # oracle comparison is structural: same formula, independent codepaths
     args = _mk(2, 8, 4, 4, 8, seed=11)

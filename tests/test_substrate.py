@@ -15,7 +15,6 @@ from repro.checkpoint.manager import list_steps
 from repro.configs import get_smoke
 from repro.data import DataConfig, batch_iterator, synthetic_batch
 from repro.optim import adamw_init, adamw_update, cosine_schedule
-from repro.optim.adamw import global_norm
 from repro.training import (
     LoopConfig,
     TrainLoop,

@@ -3,7 +3,6 @@ calibration, and the ``choose_blocks`` degenerate-input regressions.
 """
 
 import json
-import os
 
 import jax
 import jax.numpy as jnp

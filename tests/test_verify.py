@@ -1,0 +1,350 @@
+"""repro.verify: each analyzer catches its seeded known-bad input, and
+the shipped tree verifies clean (the ISSUE's acceptance criteria).
+
+Three sections mirror the three analyzers:
+
+* plans   — a hand-built Eq-9-infeasible BlockPlan is flagged; the
+  planner sweep over the default lattice emits nothing.
+* kernels — hand-built captures with a coverage gap / OOB origin /
+  torn accumulation run / footprint mismatch are each flagged; the five
+  shipped kernels verify clean with footprints equal to the planner's
+  ``kernel_block_words`` claims, and *no kernel is executed* (the
+  dispatch counter is untouched).
+* lint    — one fixture per RV rule (RV101 is the PR-6 falsy-cache bug,
+  verbatim shape), the waiver comment works, and ``lint_tree()`` over
+  the installed package is empty.
+"""
+
+from repro.engine.plan import BlockPlan, Memory, MultiTTMPlan
+from repro.observe.metrics import PALLAS_DISPATCHES
+from repro.observe import load_trace, registry
+from repro.verify import Finding
+from repro.verify.kernels import (
+    KernelCapture,
+    SpecCapture,
+    check_capture,
+    verify_kernels,
+)
+from repro.verify.lint import RULES, lint_source, lint_tree, rule_catalog
+from repro.verify.plans import (
+    check_block_plan,
+    check_memory_itemsize,
+    check_multi_ttm_plan,
+    verify_plans,
+)
+from repro.verify.__main__ import main, run
+
+VMEM = Memory.tpu_vmem(itemsize=4)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+def test_eq9_infeasible_plan_is_flagged():
+    """A block plan whose Eq-9 working set exceeds VMEM — while the
+    all-ones plan fits — must be charged as infeasible-by-choice."""
+    bad = BlockPlan(4096, (4096, 4096), 4096)
+    assert not bad.fits(VMEM)
+    fs = check_block_plan(bad, (8192, 8192, 8192), 4096, VMEM)
+    assert "eq9-infeasible" in _rules(fs)
+
+
+def test_eq9_not_charged_when_no_plan_fits():
+    """A memory too small for even the all-ones plan is a property of
+    the memory, not a planner bug: no finding."""
+    tiny = Memory.abstract(2)
+    plan = BlockPlan(1, (1, 1), 1)
+    fs = check_block_plan(plan, (4, 4, 4), 2, tiny)
+    assert "eq9-infeasible" not in _rules(fs)
+
+
+def test_nonpositive_block_is_flagged():
+    fs = check_block_plan(BlockPlan(0, (1, 1), 1), (4, 4, 4), 2, VMEM)
+    assert _rules(fs) == {"nonpositive-block"}
+
+
+def test_multi_ttm_infeasible_plan_is_flagged():
+    bad = MultiTTMPlan(4096, (4096, 4096), (64, 64))
+    assert not bad.fits(VMEM)
+    fs = check_multi_ttm_plan(bad, (8192, 8192, 8192), (64, 64), VMEM)
+    assert "eq9-infeasible" in _rules(fs)
+
+
+def test_memory_itemsize_propagation_clean():
+    assert check_memory_itemsize(VMEM) == []
+    assert check_memory_itemsize(Memory.abstract(1000)) == []
+
+
+def test_planner_sweep_is_clean():
+    """Acceptance: choose_blocks / choose_sweep_blocks /
+    choose_multi_ttm_blocks / best_uniform_block never emit a plan that
+    fails any static check, across the whole default lattice."""
+    assert verify_plans() == []
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _out_capture(grid, block, operand, index_map):
+    spec = SpecCapture(block, index_map, operand)
+    return KernelCapture(
+        grid=grid, out_specs=(spec,), out_dtypes=("float32",),
+    )
+
+
+def test_coverage_gap_is_flagged():
+    # 4 output blocks, a 2-step grid: half the output is never written.
+    cap = _out_capture((2,), (4,), (16,), lambda i: (i,))
+    fs = check_capture(cap, kernel="fixture")
+    assert "coverage-gap" in _rules(fs)
+
+
+def test_oob_origin_is_flagged():
+    cap = _out_capture((2,), (4,), (8,), lambda i: (i + 1,))
+    fs = check_capture(cap, kernel="fixture")
+    assert "oob-origin" in _rules(fs)
+
+
+def test_torn_accumulation_run_is_flagged():
+    # grid (2, 2), output indexed by the *inner* dim only: block (0,) is
+    # visited at steps 0 and 2 — the revisit is non-consecutive, so the
+    # block would be written back twice.
+    cap = _out_capture((2, 2), (3,), (6,), lambda i, j: (j,))
+    fs = check_capture(cap, kernel="fixture")
+    assert "noncontiguous-revisit" in _rules(fs)
+
+
+def test_block_divisibility_is_flagged():
+    cap = _out_capture((2,), (3,), (8,), lambda i: (i,))
+    fs = check_capture(cap, kernel="fixture")
+    assert "block-divisibility" in _rules(fs)
+
+
+def test_index_map_arity_mismatch_is_flagged():
+    cap = _out_capture((2,), (4,), (8,), lambda i: (i, 0))
+    fs = check_capture(cap, kernel="fixture")
+    assert "index-map" in _rules(fs)
+
+
+def test_footprint_mismatch_is_flagged():
+    cap = _out_capture((2,), (4,), (8,), lambda i: (i,))
+    fs = check_capture(cap, kernel="fixture", claimed_block_words=9999)
+    assert "footprint-mismatch" in _rules(fs)
+
+
+def test_acc_dtype_violation_is_flagged():
+    spec = SpecCapture((4,), lambda i: (i,), (8,))
+    cap = KernelCapture(
+        grid=(2,), out_specs=(spec,), out_dtypes=("bfloat16",),
+    )
+    fs = check_capture(cap, kernel="fixture")
+    assert "acc-dtype" in _rules(fs)
+
+
+def test_shipped_kernels_verify_clean_without_executing():
+    """Acceptance: every shipped Pallas kernel's BlockSpec footprint
+    equals the planner's kernel_block_words claim, schedules cover the
+    output with contiguous accumulation runs, accumulators are fp32 —
+    and the analysis never dispatches a kernel."""
+    before = registry().counter(PALLAS_DISPATCHES)
+    findings, verdicts = verify_kernels()
+    assert findings == []
+    names = {v["name"] for v in verdicts}
+    assert names == {
+        "mttkrp3", "mttkrpn", "mttkrp_partial", "multi_ttm", "fused_pair",
+    }
+    for v in verdicts:
+        assert v["agrees"], v
+        assert v["findings"] == 0, v
+        assert v["footprint_words"] == v["claimed_words"], v
+        # the working set the planner quotes = BlockSpec tiles + scratch
+        assert v["working_set_words"] >= v["claimed_words"], v
+        # multi-block grids: the schedule checks actually exercise
+        # accumulation runs, not single-block trivia
+        assert len([g for g in v["grid"] if g > 1]) >= 2, v
+    assert registry().counter(PALLAS_DISPATCHES) == before
+
+
+# ---------------------------------------------------------------------------
+# lint
+# ---------------------------------------------------------------------------
+
+def test_rv101_falsy_cache_fixture():
+    # the PR-6 bug, verbatim shape: an *empty* PlanCache is falsy
+    src = (
+        "def save(cal, cache=None):\n"
+        "    (cache or default_cache()).put_calibration(cal)\n"
+    )
+    fs = lint_source(src, "tune/fixture.py")
+    assert _rules(fs) == {"RV101"}
+
+
+def test_rv101_is_not_flagged_on_none_check():
+    src = (
+        "def save(cal, cache=None):\n"
+        "    dest = default_cache() if cache is None else cache\n"
+        "    dest.put_calibration(cal)\n"
+    )
+    assert lint_source(src, "tune/fixture.py") == []
+
+
+def test_rv102_tracer_branch_fixture():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    if jnp.sum(x) > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    fs = lint_source(src, "engine/fixture.py")
+    assert _rules(fs) == {"RV102"}
+    # dtype inspection is static under tracing: allowlisted
+    safe = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    if jnp.issubdtype(x.dtype, jnp.floating):\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert lint_source(safe, "engine/fixture.py") == []
+    # outside the traced layers the same code is fine
+    assert lint_source(src, "analysis/fixture.py") == []
+
+
+def test_rv103_jax_in_pure_math_fixture():
+    src = "import jax\n"
+    fs = lint_source(src, "engine/plan.py")
+    assert _rules(fs) == {"RV103"}
+    assert lint_source(src, "engine/other.py") == []
+
+
+def test_rv104_mutable_default_fixture():
+    fs = lint_source("def f(x=[]):\n    return x\n", "core/fixture.py")
+    assert _rules(fs) == {"RV104"}
+    fs = lint_source(
+        "def f(x=make()):\n    return x\n", "core/fixture.py"
+    )
+    assert _rules(fs) == {"RV104"}
+
+
+def test_rv105_wallclock_fixture():
+    src = "import time\ndef f():\n    return time.perf_counter()\n"
+    fs = lint_source(src, "core/fixture.py")
+    assert _rules(fs) == {"RV105"}
+    # measurement layers and the dispatch layer's span timing are exempt
+    assert lint_source(src, "tune/fixture.py") == []
+    assert lint_source(src, "engine/execute.py") == []
+    assert lint_source(src, "engine/sweep.py") == []
+
+
+def test_rv106_shim_reintroduction_fixture():
+    fs = lint_source(
+        "def pallas_dispatch_count():\n    return 0\n",
+        "engine/fixture.py",
+    )
+    assert _rules(fs) == {"RV106"}
+    fs = lint_source(
+        "from repro.engine.execute import pallas_dispatch_count\n",
+        "analysis/fixture.py",
+    )
+    assert _rules(fs) == {"RV106"}
+
+
+def test_waiver_comment_suppresses_finding():
+    src = (
+        "import time\n"
+        "def f():\n"
+        "    return time.perf_counter()  # verify: allow=RV105\n"
+    )
+    assert lint_source(src, "core/fixture.py") == []
+    # allow=all works too
+    src_all = src.replace("allow=RV105", "allow=all")
+    assert lint_source(src_all, "core/fixture.py") == []
+
+
+def test_unparsable_module_is_a_finding():
+    fs = lint_source("def broken(:\n", "core/fixture.py")
+    assert [f.rule for f in fs] == ["syntax"]
+
+
+def test_rule_catalog_lists_every_rule():
+    cat = rule_catalog()
+    for r in RULES:
+        assert r.code in cat and r.name in cat
+
+
+def test_lint_tree_is_clean():
+    """Acceptance: the shipped package has zero lint findings."""
+    assert lint_tree() == []
+
+
+# ---------------------------------------------------------------------------
+# CLI + trace export
+# ---------------------------------------------------------------------------
+
+def test_finding_str_and_dict():
+    f = Finding("lint", "RV101", "tune/x.py:3", "falsy or")
+    assert str(f) == "[lint:RV101] tune/x.py:3: falsy or"
+    assert f.to_dict()["rule"] == "RV101"
+
+
+def test_cli_rules_exits_zero(capsys):
+    assert main(["--rules"]) == 0
+    out = capsys.readouterr().out
+    assert "RV101" in out and "RV106" in out
+
+
+def test_cli_unknown_analyzer_exits_two(capsys):
+    assert main(["--only", "bogus"]) == 2
+
+
+def test_cli_lint_clean_tree_exits_zero(capsys):
+    assert main(["--only", "lint"]) == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+def test_cli_findings_exit_one(monkeypatch, capsys):
+    import repro.verify.lint as lint_mod
+
+    monkeypatch.setattr(
+        lint_mod, "lint_tree",
+        lambda: [Finding("lint", "RV999", "x.py:1", "seeded")],
+    )
+    assert main(["--only", "lint"]) == 1
+    assert "[lint:RV999]" in capsys.readouterr().out
+
+
+def test_trace_export_schema(tmp_path):
+    """--trace-out writes kind=static_verify events in the observe span
+    schema, one per kernel verdict plus a summary row the report CLI
+    can table (static_verify is in its DISPATCH_KINDS)."""
+    from repro.observe.report import DISPATCH_KINDS, render_rows
+
+    p = tmp_path / "verify.jsonl"
+    findings, verdicts = run(("kernels",), trace_out=str(p))
+    assert findings == []
+    events = load_trace(str(p))
+    sv = [e for e in events if e["kind"] == "static_verify"]
+    assert len(sv) == len(verdicts) + 1  # one per kernel + summary
+    summary = sv[-1]
+    assert summary["name"] == "summary"
+    assert summary["kernels_checked"] == len(verdicts)
+    assert summary["kernels_agreeing"] == len(verdicts)
+    assert summary["findings"] == 0
+    assert "static_verify" in DISPATCH_KINDS
+    rows, flagged = render_rows(events)
+    assert len(rows) == len(sv) and flagged == 0
+
+
+def test_default_run_matches_cli_contract():
+    """run() over all analyzers returns the same clean verdict the CI
+    gate requires (python -m repro.verify exits 0 on this tree)."""
+    findings, verdicts = run()
+    assert findings == []
+    assert len(verdicts) == 5
