@@ -27,15 +27,25 @@ words or worsen their measured/modeled optimality ratio beyond it.
 Usage:
     PYTHONPATH=src python -m benchmarks.perf_gate OLD.json NEW.json \\
         [--threshold 0.5] [--min-fused-speedup 0.9] [--require-fused-win]
+    PYTHONPATH=src python -m benchmarks.perf_gate          # auto-discover
 
-Exit status 0 = gate passes; 1 = regressions (one line per violation on
-stderr); 2 = bad invocation / unreadable input.
+With no positional files the gate discovers the committed trajectory
+itself: the two newest ``BENCH_*.json`` under ``--bench-dir`` (default:
+the current directory).  Fewer than two such files is not an error — a
+young repo (or a fresh fork) has no trajectory to hold yet, so the gate
+prints what it found and exits 0.
+
+Exit status 0 = gate passes (or nothing to compare yet); 1 = regressions
+(one line per violation on stderr); 2 = bad invocation / unreadable
+input.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import re
 import sys
 
@@ -148,8 +158,14 @@ def main(argv: list[str] | None = None) -> int:
         prog="benchmarks.perf_gate", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
-    ap.add_argument("old", help="baseline BENCH_*.json (earlier run)")
-    ap.add_argument("new", help="candidate BENCH_*.json (newer run)")
+    ap.add_argument("old", nargs="?", default=None,
+                    help="baseline BENCH_*.json (earlier run); omit both "
+                         "positionals to auto-discover from --bench-dir")
+    ap.add_argument("new", nargs="?", default=None,
+                    help="candidate BENCH_*.json (newer run)")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding the committed BENCH_*.json "
+                         "trajectory (used when old/new are omitted)")
     ap.add_argument("--threshold", type=float, default=0.5,
                     help="relative walltime growth allowed (default 0.5)")
     ap.add_argument("--min-fused-speedup", type=float, default=None,
@@ -162,6 +178,26 @@ def main(argv: list[str] | None = None) -> int:
                          "growth allowed in modeled words / optimality "
                          "ratio for rows traced in both files")
     args = ap.parse_args(argv)
+    if (args.old is None) != (args.new is None):
+        print(
+            "perf_gate: pass both OLD and NEW files, or neither "
+            "(auto-discovery)", file=sys.stderr,
+        )
+        return 2
+    if args.old is None:
+        files = sorted(
+            glob.glob(os.path.join(args.bench_dir, "BENCH_*.json"))
+        )
+        if len(files) < 2:
+            found = ", ".join(os.path.basename(f) for f in files) or "none"
+            print(
+                f"perf_gate: skipped — found {len(files)} BENCH_*.json "
+                f"in {args.bench_dir!r} ({found}); a trajectory needs "
+                f"two. Record a second run with benchmarks.run to arm "
+                f"the gate."
+            )
+            return 0
+        args.old, args.new = files[-2], files[-1]
     try:
         old = load_bench(args.old)
         new = load_bench(args.new)

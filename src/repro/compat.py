@@ -57,3 +57,20 @@ def make_mesh(shape: Sequence[int], names: Sequence[str]) -> jax.sharding.Mesh:
             tuple(shape), tuple(names), axis_types=(AxisType.Auto,) * len(names)
         )
     return jax.make_mesh(tuple(shape), tuple(names))
+
+
+def make_abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """Device-free ``jax.sharding.AbstractMesh`` across jax versions.
+
+    0.4.x takes one ``((name, size), ...)`` tuple; newer releases take
+    separate ``axis_sizes``/``axis_names`` tuples. An abstract mesh
+    carries only the logical grid — enough to trace a ``shard_map``
+    program with ``jax.make_jaxpr`` on a single-device host (the AOT
+    path ``repro.verify.comm`` uses), never to run it.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:  # pragma: no cover - version-dependent
+        return AbstractMesh(tuple(shape), tuple(names))

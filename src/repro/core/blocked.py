@@ -35,6 +35,7 @@ def mttkrp_blocked(
     factors: Sequence[jax.Array],
     mode: int,
     block: int,
+    f32_acc: bool = False,
 ) -> jax.Array:
     """Blocked MTTKRP with Algorithm 2's loop order, expressed as einsum.
 
@@ -42,6 +43,9 @@ def mttkrp_blocked(
     contraction indices, so XLA sees exactly the blocked schedule:
 
         B[n_blk, n_in, r] += X[blk..., in...] * prod_k A_k[k_blk, k_in, r]
+
+    ``f32_acc=True`` forces fp32 accumulation (the engine sets it whenever
+    a ``compute_dtype`` policy casts the operands to a narrow type).
     """
     n = x.ndim
     dims = x.shape
@@ -64,7 +68,8 @@ def mttkrp_blocked(
         f_subs.append(_L[2 * k] + _L[2 * k + 1] + "z")
     out_sub = _L[2 * mode] + _L[2 * mode + 1] + "z"
     spec = ",".join([t_sub] + f_subs) + "->" + out_sub
-    out = jnp.einsum(spec, xb, *f_ops, optimize="optimal")
+    kw = {"preferred_element_type": jnp.float32} if f32_acc else {}
+    out = jnp.einsum(spec, xb, *f_ops, optimize="optimal", **kw)
     out = out.reshape(-1, rank)
     return out[: dims[mode], :]
 
@@ -74,6 +79,7 @@ def multi_ttm_blocked(
     matrices: Sequence[jax.Array],
     keep: int | None,
     block: int,
+    f32_acc: bool = False,
 ) -> jax.Array:
     """Blocked Multi-TTM with the Algorithm-2 loop order, as an einsum.
 
@@ -82,7 +88,8 @@ def multi_ttm_blocked(
     exactly the blocked schedule of ``core.bounds.multi_ttm_blocked_cost``.
     ``matrices[k]`` is ``(I_k, R_k)``; mode ``keep`` (if not None) is left
     uncontracted and its matrix ignored.  Output modes keep their tensor
-    positions: ``(R_1, ..., I_keep, ..., R_N)``.
+    positions: ``(R_1, ..., I_keep, ..., R_N)``.  ``f32_acc=True`` forces
+    fp32 accumulation under a narrow ``compute_dtype`` policy.
     """
     n = x.ndim
     dims = x.shape
@@ -104,7 +111,8 @@ def multi_ttm_blocked(
         f_subs.append(_L[2 * k] + _L[2 * k + 1] + rank_l[k])
         out_sub += rank_l[k]
     spec = ",".join([t_sub] + f_subs) + "->" + out_sub
-    out = jnp.einsum(spec, xb, *f_ops, optimize="optimal")
+    kw = {"preferred_element_type": jnp.float32} if f32_acc else {}
+    out = jnp.einsum(spec, xb, *f_ops, optimize="optimal", **kw)
     if keep is not None:
         # the kept mode contributes its (blk, in) axis pair at position
         # `keep` (every earlier mode contributes one rank axis): merge the

@@ -46,7 +46,13 @@ from ..compat import shard_map
 from ..core.cp_als import CPResult
 from ..core.tensor import frob_norm, random_factors
 from .grid_select import GridChoice, choose_cp_grid
-from .mesh import hyperslice_axes, make_grid_mesh, mode_axis, validate_grid
+from .mesh import (
+    RANK_AXIS,
+    hyperslice_axes,
+    make_grid_mesh,
+    mode_axis,
+    validate_grid,
+)
 from .mttkrp_parallel import (
     LocalFn,
     engine_local_fn,
@@ -55,6 +61,7 @@ from .mttkrp_parallel import (
     tensor_spec,
 )
 from .ring import (
+    arrival_source,
     ring_all_gather_parts,
     ring_assemble,
     ring_index,
@@ -129,7 +136,7 @@ def _sweep_local(
             w = x_loc.shape[prev] // q_prev
             c = None
             for t, part in enumerate(parts):
-                src = (me_prev - t) % q_prev
+                src = arrival_source(me_prev, t, q_prev)
                 x_sl = jax.lax.dynamic_slice_in_dim(
                     x_loc, src * w, w, axis=prev
                 )
@@ -230,7 +237,7 @@ def build_cp_sweep(
             "memory": memory if memory is not None else UNSET,
         },
     )
-    if "r" in mesh.axis_names:
+    if RANK_AXIS in mesh.axis_names:
         raise ValueError(
             "the CP-ALS sweep keeps X stationary (Algorithm 3); rank-axis "
             "(p0>1) meshes are for single-mode mttkrp_general"
@@ -371,13 +378,13 @@ def cp_als_parallel(
             grid = choice.grid
         mesh = make_grid_mesh(grid, dims=x.shape, rank=rank)
     else:
-        if "r" in mesh.axis_names:
+        if RANK_AXIS in mesh.axis_names:
             raise ValueError(
                 "cp_als_parallel keeps X stationary; pass a p0=1 grid mesh"
             )
         grid = tuple(
             mesh.shape[mode_axis(k)]
-            for k in range(len([n for n in mesh.axis_names if n != "r"]))
+            for k in range(len([n for n in mesh.axis_names if n != RANK_AXIS]))
         )
         validate_grid(grid, dims=x.shape, rank=rank)
     if len(grid) != ndim:

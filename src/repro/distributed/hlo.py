@@ -1,8 +1,19 @@
-"""Compiled-HLO collective parser.
+"""Collective extraction from compiled HLO *and* from jaxprs.
 
-Extracts every collective op (all-gather / all-reduce / reduce-scatter /
-all-to-all / collective-permute) from ``compiled.as_text()`` and accounts
-bytes two ways:
+Two front ends, one byte-accounting currency (:class:`CollectiveOp` /
+:class:`CollectiveSummary`):
+
+* :func:`parse_collectives` extracts every collective op (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute) from
+  ``compiled.as_text()`` — the dynamic path ``tests/dist_worker.py``
+  measures on real multi-device meshes.
+* :func:`jaxpr_collectives` walks a ``jax.make_jaxpr`` trace of a
+  shard_map program for the same primitives — the static path
+  (``repro.verify.comm``): it needs no devices at all (an
+  ``AbstractMesh`` suffices), so the byte model is provable on a
+  single-CPU CI host without compiling or spawning anything.
+
+Bytes are accounted two ways:
 
 * ``operand_bytes`` — sum of operand sizes (the roofline-term convention);
 * ``ring_bytes``    — per-device link traffic under ring/bucket algorithms
@@ -11,13 +22,18 @@ bytes two ways:
                       all-to-all (q-1)/q·w, collective-permute w.
 
 SPMD HLO is a per-device program, so operand shapes are per-device shards —
-exactly the paper's "w = max_p nnz" local sizes.
+exactly the paper's "w = max_p nnz" local sizes; inside a shard_map jaxpr
+the avals are the same per-shard shapes, which is why both front ends
+agree to the byte (``tests/test_verify.py`` pins a few points of each
+against the other via the sweep model).
 """
 
 from __future__ import annotations
 
+import math
 import re
 from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -89,8 +105,8 @@ class CollectiveSummary:
     def ring_bytes(self) -> int:
         return sum(o.ring_bytes for o in self.ops)
 
-    def by_kind(self) -> dict[str, dict]:
-        out: dict[str, dict] = {}
+    def by_kind(self) -> dict[str, dict[str, int]]:
+        out: dict[str, dict[str, int]] = {}
         for o in self.ops:
             d = out.setdefault(o.kind, {"count": 0, "operand_bytes": 0,
                                         "ring_bytes": 0})
@@ -149,7 +165,7 @@ def parse_collectives(hlo_text: str) -> CollectiveSummary:
     return summary
 
 
-def collective_bytes(compiled_or_text) -> int:
+def collective_bytes(compiled_or_text: Any) -> int:
     """Prompt-convention collective bytes: sum of operand sizes."""
     text = (
         compiled_or_text
@@ -157,3 +173,92 @@ def collective_bytes(compiled_or_text) -> int:
         else compiled_or_text.as_text()
     )
     return parse_collectives(text).operand_bytes
+
+
+# --------------------------------------------------------------------------
+# Jaxpr front end (the static path)
+# --------------------------------------------------------------------------
+
+#: jaxpr primitive name -> HLO collective kind. ``psum`` maps to
+#: all-reduce (under shard_map it lowers to one); ``psum2`` is the
+#: replication-checked rewrite shard_map's ``check_rep=True`` emits on
+#: jax 0.4.x — same collective, same bytes; ``ppermute`` to
+#: collective-permute. ``pmean`` has no primitive of its own (it traces
+#: to psum + divide), so the map is complete for this repo's programs.
+JAXPR_COLLECTIVE_PRIMS: dict[str, str] = {
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "psum": "all-reduce",
+    "psum2": "all-reduce",
+    "ppermute": "collective-permute",
+    "all_to_all": "all-to-all",
+}
+
+
+def _aval_bytes(avals: Iterable[Any]) -> int:
+    total = 0
+    for aval in avals:
+        if not hasattr(aval, "shape"):  # e.g. AbstractToken
+            continue
+        import jax.numpy as jnp  # local: keep the HLO path jax-light
+
+        total += int(math.prod(aval.shape)) * jnp.dtype(aval.dtype).itemsize
+    return total
+
+
+def _group_size(prim: str, params: Mapping[str, Any],
+                axis_sizes: Mapping[str, int]) -> int:
+    if prim in ("all_gather", "reduce_scatter", "all_to_all"):
+        return int(params["axis_size"])
+    if prim in ("psum", "psum2"):
+        q = 1
+        for a in params.get("axes", ()):
+            if isinstance(a, str):
+                q *= int(axis_sizes.get(a, 1))
+        return q
+    return 2  # ppermute: group size is unused by its ring_bytes rule
+
+
+def _walk_jaxpr(jaxpr: Any, axis_sizes: Mapping[str, int],
+                ops: list[CollectiveOp], repeat: int) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in JAXPR_COLLECTIVE_PRIMS:
+            op = CollectiveOp(
+                JAXPR_COLLECTIVE_PRIMS[prim],
+                prim,
+                _aval_bytes(v.aval for v in eqn.invars),
+                _aval_bytes(v.aval for v in eqn.outvars),
+                _group_size(prim, eqn.params, axis_sizes),
+            )
+            ops.extend([op] * repeat)
+        # recurse into nested jaxprs (pjit/shard_map/cond/scan params
+        # carry ClosedJaxpr, raw Jaxpr, or sequences of either)
+        inner_repeat = repeat
+        if prim == "scan":
+            inner_repeat = repeat * int(eqn.params.get("length", 1))
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (tuple, list)) else (val,)):
+                if hasattr(sub, "jaxpr"):  # ClosedJaxpr
+                    _walk_jaxpr(sub.jaxpr, axis_sizes, ops, inner_repeat)
+                elif hasattr(sub, "eqns"):  # raw Jaxpr
+                    _walk_jaxpr(sub, axis_sizes, ops, inner_repeat)
+
+
+def jaxpr_collectives(closed_jaxpr: Any,
+                      axis_sizes: Mapping[str, int]) -> CollectiveSummary:
+    """Every collective primitive in a (closed) jaxpr, recursively.
+
+    ``axis_sizes`` maps mesh axis names to sizes (``dict(mesh.shape)``) —
+    needed because a ``psum`` eqn records axis *names*, not sizes. Avals
+    inside a shard_map body are per-shard, so the resulting
+    :class:`CollectiveSummary` uses exactly the same "w = local words"
+    convention as the HLO front end, and ``ring_bytes`` is directly
+    comparable to the §V-C3 sweep models. ``scan`` bodies are counted
+    ``length`` times; this repo's sweep programs are fully unrolled, so
+    the multiplier is exercised only defensively.
+    """
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    summary = CollectiveSummary()
+    _walk_jaxpr(jaxpr, axis_sizes, summary.ops, 1)
+    return summary

@@ -31,7 +31,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .mesh import hyperslice_axes, mode_axis, row_sharding_axes
+from .mesh import RANK_AXIS, hyperslice_axes, mode_axis, row_sharding_axes
 
 LocalFn = Callable[[jax.Array, Sequence[jax.Array], int], jax.Array]
 
@@ -132,7 +132,7 @@ def tensor_spec(ndim: int, rank_split_mode: int | None = None) -> P:
         if k == rank_split_mode:
             # m-axis major, r minor: the rank-axis all-gather then
             # reconstructs the contiguous block S^{(k)}_{p_k}
-            parts.append((mode_axis(k), "r"))
+            parts.append((mode_axis(k), RANK_AXIS))
         else:
             parts.append(mode_axis(k))
     return P(*parts)
@@ -140,7 +140,7 @@ def tensor_spec(ndim: int, rank_split_mode: int | None = None) -> P:
 
 def factor_spec(ndim: int, k: int, rank_axis: bool = False) -> P:
     """A^(k)'s PartitionSpec: rows over (m{k}, hyperslice), cols over r."""
-    return P(row_sharding_axes(ndim, k), "r" if rank_axis else None)
+    return P(row_sharding_axes(ndim, k), RANK_AXIS if rank_axis else None)
 
 
 def output_spec(ndim: int, mode: int, rank_axis: bool = False) -> P:
@@ -255,7 +255,7 @@ def _general_local(
 ) -> jax.Array:
     """Per-processor body of Algorithm 4 (runs under shard_map)."""
     # Line 3: All-Gather the subtensor across the rank-axis fiber
-    x_full = jax.lax.all_gather(x_loc, ("r",), axis=0, tiled=True)
+    x_full = jax.lax.all_gather(x_loc, (RANK_AXIS,), axis=0, tiled=True)
     by_mode: list[jax.Array | None] = [None] * ndim
     fi = 0
     for k in range(ndim):

@@ -15,50 +15,87 @@ Traffic is preserved EXACTLY: an all-gather of an ``n``-word shard over
 ``q-1`` permutes of one ``n``-word chunk here; a reduce-scatter of a
 ``q*n``-word operand costs ``(q-1) * n``, ditto. ``tests/dist_worker.py``
 pins the compiled-HLO byte counts of the ring sweep to the same
-``stationary_sweep_words`` model as the monolithic one.
+``stationary_sweep_words`` model as the monolithic one, and
+``repro.verify.comm`` re-proves it statically from the jaxpr.
 
 Linearization: multi-axis rings run over the listed mesh axes in
 row-major order (first listed outermost) — the same flattening
 ``jax.lax.all_gather(..., tiled=True)`` and ``psum_scatter`` use, so the
 assembled results are bit-compatible orderings (sums differ only in
 association).
+
+The *schedule itself is data*: :func:`ring_perm`,
+:func:`arrival_source`, and :func:`reduce_chunk_index` are pure integer
+functions shared by the runtime collectives below, by the overlap
+consumers in ``cp_als_parallel``/``tucker_parallel``, and by the static
+ring-schedule verifier (``repro.verify.comm``) — so the verifier checks
+the exact arithmetic the runtime executes, not a parallel model of it.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
+#: A ring position / step index: a Python int in the static verifier,
+#: a traced ``jax.Array`` inside a shard_map body.
+Index = Union[int, jax.Array]
 
-def _as_axes(axes) -> tuple[str, ...]:
+AxesLike = Union[str, Sequence[str]]
+
+
+def _as_axes(axes: AxesLike) -> tuple[str, ...]:
     return (axes,) if isinstance(axes, str) else tuple(axes)
 
 
-def ring_size(axes) -> int:
+def ring_size(axes: AxesLike) -> int:
     """Number of processors on the (possibly multi-axis) ring."""
     return jax.lax.psum(1, _as_axes(axes))
 
 
-def ring_index(axes) -> jax.Array:
+def ring_index(axes: AxesLike) -> jax.Array:
     """This processor's linearized position on the ring (row-major over
     the listed axes, first axis outermost — the ``tiled=True`` order)."""
     idx = None
     for name in _as_axes(axes):
         i = jax.lax.axis_index(name)
         idx = i if idx is None else idx * jax.lax.psum(1, name) + i
+    assert idx is not None
     return idx
 
 
-def _ring_perm(q: int) -> list[tuple[int, int]]:
-    # shard j receives from shard j-1 each step (forward ring)
+def ring_perm(q: int) -> list[tuple[int, int]]:
+    """The forward-ring ``ppermute`` permutation: shard ``i`` sends to
+    ``i+1 mod q`` (equivalently, shard ``j`` receives from ``j-1``).
+    A single q-cycle, so every step is deadlock-free and conflict-free —
+    :func:`repro.verify.comm.check_ring_permutation` proves it."""
     return [(i, (i + 1) % q) for i in range(q)]
 
 
-def ring_all_gather_parts(x: jax.Array, axes) -> list[jax.Array]:
+def arrival_source(me: Index, t: Index, q: int) -> Index:
+    """Ring source of the chunk that *arrives at step t* on processor
+    ``me`` under :func:`ring_perm`: ``(me - t) mod q``.
+
+    Step 0 is the local shard; each later step shifts the provenance one
+    hop upstream. Both the runtime consumers and the static verifier
+    index arrivals through this function.
+    """
+    return (me - t) % q
+
+
+def reduce_chunk_index(me: Index, t: Index, q: int) -> Index:
+    """Local chunk folded into the accumulator at reduce-scatter step
+    ``t`` on processor ``me``: ``(me - t - 1) mod q`` — the block
+    destined ``t+1`` hops downstream. Step 0 is the accumulator seed
+    (no ppermute yet); steps 1..q-1 each follow one hop."""
+    return (me - t - 1) % q
+
+
+def ring_all_gather_parts(x: jax.Array, axes: AxesLike) -> list[jax.Array]:
     """The raw ring schedule: ``q`` chunks, where ``parts[t]`` is the chunk
-    that *arrives at step t* — from ring source ``(me - t) mod q``
+    that *arrives at step t* — from ring source ``arrival_source(me, t, q)``
     (``parts[0]`` is this processor's own shard). Exposed so a consumer
     can contract each chunk as it lands; total transfer is ``(q-1)``
     chunk-hops, the exact ring all-gather volume."""
@@ -67,7 +104,7 @@ def ring_all_gather_parts(x: jax.Array, axes) -> list[jax.Array]:
     parts = [x]
     if q == 1:
         return parts
-    perm = _ring_perm(q)
+    perm = ring_perm(q)
     acc = x
     for _ in range(1, q):
         acc = jax.lax.ppermute(acc, axes, perm)
@@ -75,7 +112,7 @@ def ring_all_gather_parts(x: jax.Array, axes) -> list[jax.Array]:
     return parts
 
 
-def ring_assemble(parts: Sequence[jax.Array], axes) -> jax.Array:
+def ring_assemble(parts: Sequence[jax.Array], axes: AxesLike) -> jax.Array:
     """Order ring arrivals into the ``all_gather(..., axis=0, tiled=True)``
     layout. Arrival t came from source ``(me - t) mod q``; reversing the
     stack puts block u at source ``(me + 1 + u) mod q``, and rolling by
@@ -85,24 +122,24 @@ def ring_assemble(parts: Sequence[jax.Array], axes) -> jax.Array:
         return parts[0]
     me = ring_index(axes)
     rows = parts[0].shape[0]
-    stacked = jnp.concatenate(parts[::-1], axis=0)
+    stacked = jnp.concatenate(list(parts)[::-1], axis=0)
     return jnp.roll(stacked, shift=(me + 1) * rows, axis=0)
 
 
-def ring_all_gather(x: jax.Array, axes) -> jax.Array:
+def ring_all_gather(x: jax.Array, axes: AxesLike) -> jax.Array:
     """Drop-in for ``jax.lax.all_gather(x, axes, axis=0, tiled=True)`` as
     a ``ppermute`` ring: same result, same ring traffic, chunked
     dataflow."""
     return ring_assemble(ring_all_gather_parts(x, axes), axes)
 
 
-def ring_reduce_scatter(c: jax.Array, axes) -> jax.Array:
+def ring_reduce_scatter(c: jax.Array, axes: AxesLike) -> jax.Array:
     """Drop-in for ``jax.lax.psum_scatter(c, axes, scatter_dimension=0,
     tiled=True)`` as a ``ppermute`` ring.
 
     Each step forwards a partial sum one hop and folds in the local chunk
-    destined ``t+1`` hops downstream; after ``q-1`` steps processor ``j``
-    holds block ``j`` fully summed. ``q-1`` hops of one output-sized
+    :func:`reduce_chunk_index` selects; after ``q-1`` steps processor
+    ``j`` holds block ``j`` fully summed. ``q-1`` hops of one output-sized
     chunk — the exact ring reduce-scatter volume. Summation order differs
     from ``psum_scatter`` (ring association), so results match to
     floating-point tolerance, not bitwise."""
@@ -112,12 +149,13 @@ def ring_reduce_scatter(c: jax.Array, axes) -> jax.Array:
         return c
     me = ring_index(axes)
     rows = c.shape[0] // q
-    def chunk(i):
+
+    def chunk(i: Index) -> jax.Array:
         return jax.lax.dynamic_slice_in_dim(c, i * rows, rows, axis=0)
 
-    perm = _ring_perm(q)
-    acc = chunk((me - 1) % q)
+    perm = ring_perm(q)
+    acc = chunk(reduce_chunk_index(me, 0, q))
     for t in range(1, q):
         acc = jax.lax.ppermute(acc, axes, perm)
-        acc = acc + chunk((me - t - 1) % q)
+        acc = acc + chunk(reduce_chunk_index(me, t, q))
     return acc

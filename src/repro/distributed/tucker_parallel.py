@@ -47,6 +47,7 @@ from ..core.tucker import (
 )
 from .grid_select import GridChoice, choose_tucker_grid
 from .mesh import (
+    RANK_AXIS,
     hyperslice_axes,
     make_grid_mesh,
     mode_axis,
@@ -332,7 +333,7 @@ def tucker_hooi_parallel(
         validate_tucker_grid(grid, dims=x.shape)
         mesh = make_grid_mesh(grid)
     else:
-        if "r" in mesh.axis_names:
+        if RANK_AXIS in mesh.axis_names:
             raise ValueError(
                 "tucker_hooi_parallel keeps X stationary; pass a p0=1 "
                 "grid mesh"

@@ -672,6 +672,29 @@ class ExecutionContext:
             dims=shape, rank=rank,
         )
 
+    def build_abstract_mesh(self):
+        """Device-free twin of :meth:`build_mesh`: an ``AbstractMesh``
+        over the same grid. Enough to *trace* the distributed sweep
+        (``jax.make_jaxpr``) with no devices at all — the static
+        communication verifier (``repro.verify.comm``) analyzes grids
+        far larger than the host this way. Never resolvable to devices;
+        running a program built on it raises inside jax."""
+        if self.distribution is None:
+            raise ValueError(
+                "build_abstract_mesh() on a non-distributed context; pass "
+                "distributed=True / grid= / procs= to create()"
+            )
+        if self.distribution.grid is None:
+            raise ValueError(
+                "no grid resolved yet: call resolve_for(shape, rank) / "
+                "for_problem(...) first, or pass grid= explicitly"
+            )
+        from ..distributed.mesh import make_abstract_grid_mesh
+
+        return make_abstract_grid_mesh(
+            self.distribution.grid, p0=self.distribution.p0
+        )
+
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
         mem = None

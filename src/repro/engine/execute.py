@@ -263,7 +263,7 @@ def _mttkrp_impl(
             block = best_uniform_block(x.shape, mem)
         if _span is not None:
             _span["block"] = block
-        out = mttkrp_blocked(x, factors, mode, block)
+        out = mttkrp_blocked(x, factors, mode, block, f32_acc=mixed)
         return out.astype(out_dtype) if out_dtype is not None else out
     # pallas
     if x.ndim < 3:  # the kernels need >= 2 contraction dims
@@ -667,7 +667,7 @@ def _multi_ttm_impl(
             block = multi_ttm_best_block_size(
                 canon, b_ranks, mem.budget_words
             )
-        out = multi_ttm_blocked(x, matrices, keep, block)
+        out = multi_ttm_blocked(x, matrices, keep, block, f32_acc=mixed)
         return out.astype(out_dtype) if out_dtype is not None else out
     # pallas: canonicalize kept mode first (mode 0 for the full core),
     # run the blocked Kronecker kernel, then restore the mode order

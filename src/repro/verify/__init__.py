@@ -1,6 +1,6 @@
 """Static verification: prove the paper's invariants without running anything.
 
-Three analyzers, one :class:`Finding` currency, one CLI
+Five analyzers, one :class:`Finding` currency, one CLI
 (``python -m repro.verify``):
 
 * :mod:`repro.verify.plans` — pure arithmetic over
@@ -21,7 +21,22 @@ Three analyzers, one :class:`Finding` currency, one CLI
   classes (the PR-6 falsy-``PlanCache`` bug, tracer-unsafe branching,
   jax imports in the pure-math modules, mutable defaults, wall-clock
   calls in deterministic layers, reintroduction of the removed
-  ``pallas_dispatch_count`` shim).
+  ``pallas_dispatch_count`` shim, raw collectives outside
+  ``distributed/``, hard-coded mesh-axis literals).
+* :mod:`repro.verify.comm` — the AOT communication verifier: traces
+  every distributed shard_map program on a device-free
+  ``AbstractMesh`` over a shape x rank x grid lattice and proves the
+  collective ring bytes equal the §V-C3 sweep models to the byte (and
+  sit above the clamped Thm 4.2/4.3 parallel lower bounds), that the
+  ``ppermute`` ring schedules are deadlock-free single cycles with
+  exact-coverage, write-once, read-at-or-after-arrival chunk flow, and
+  that grid selection matches brute force — zero processes, zero
+  kernel executions.
+* :mod:`repro.verify.dtypes` — the dtype-flow analyzer: walks each
+  backend's jaxpr under ``compute_dtype=bfloat16`` and proves every
+  ``dot_general``/``reduce_sum`` that consumes a narrow operand
+  accumulates into fp32 (the PR-6 mixed-precision policy as a
+  structural invariant).
 
 This is the *static* half of the observability story: the dynamic half
 (:mod:`repro.observe.bounds_audit`) measures compiled HLO; this package
@@ -39,8 +54,10 @@ from dataclasses import asdict, dataclass
 class Finding:
     """One static-analysis violation: which analyzer, which rule, where.
 
-    ``analyzer`` is ``"plans"`` / ``"kernels"`` / ``"lint"``; ``rule`` is
-    the stable rule code (e.g. ``"eq9-infeasible"``, ``"RV101"``);
+    ``analyzer`` is ``"plans"`` / ``"kernels"`` / ``"lint"`` /
+    ``"comm"`` / ``"dtypes"``; ``rule`` is
+    the stable rule code (e.g. ``"eq9-infeasible"``, ``"RV101"``,
+    ``"byte-model-mismatch"``);
     ``subject`` names the object (a plan/kernel description or a
     ``file:line`` location); ``detail`` is the human-readable evidence.
     """

@@ -26,6 +26,17 @@ Each rule encodes one *incident*, not a style preference:
   (PR 7 deprecated it for one release); the counter lives in
   ``MetricsRegistry``.  Defining or importing the old name anywhere in
   ``src/`` reintroduces a dead API.
+* **RV107 raw-collective** — ``lax.ppermute``/``all_gather``/``psum``/
+  ``psum_scatter``/``all_to_all`` calls outside ``distributed/``: every
+  collective must go through ``distributed/ring.py`` or the sweep
+  builders, or the static communication verifier
+  (``repro.verify.comm``) cannot account its bytes and the sweep models
+  silently under-count.
+* **RV108 axis-literal** — a hard-coded mesh-axis string (``"r"`` or
+  ``"m<k>"``) inside ``distributed/`` instead of ``mesh.RANK_AXIS`` /
+  ``mesh.mode_axis(k)``: a literal survives an axis rename and then
+  shards on a nonexistent axis at trace time (``mesh.py`` itself is the
+  constants' home and exempt).
 
 A finding on a line carrying ``# verify: allow=<code>`` (or
 ``allow=all``) is waived — the waiver is part of the diff, so
@@ -35,6 +46,7 @@ exceptions are reviewable.
 from __future__ import annotations
 
 import ast
+import re
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterable, Sequence
@@ -88,6 +100,20 @@ RULES: tuple[Rule, ...] = (
         "repro.observe.metrics.registry().counter('engine."
         "pallas_dispatches'). Do not reintroduce the shim.",
     ),
+    Rule(
+        "RV107", "raw-collective",
+        "Raw lax collective (ppermute/all_gather/psum/psum_scatter/"
+        "all_to_all/pshuffle) outside distributed/: route it through "
+        "distributed/ring.py or the sweep builders so the static "
+        "communication verifier can account its bytes.",
+    ),
+    Rule(
+        "RV108", "axis-literal",
+        "Hard-coded mesh-axis string ('r' or 'm<k>') in distributed/ "
+        "instead of mesh.RANK_AXIS / mesh.mode_axis(k): literals "
+        "survive axis renames and fail at trace time. mesh.py (the "
+        "constants' home) is exempt.",
+    ),
 )
 
 #: RV101: left operand names that look like stateful containers.
@@ -124,6 +150,19 @@ _WALLCLOCK_CALLS = frozenset({
     ("random", "random"), ("random", "randint"), ("random", "choice"),
     ("random", "shuffle"), ("random", "uniform"), ("random", "seed"),
 })
+
+#: RV107: collective primitives that must stay inside distributed/.
+_COLLECTIVE_NAMES = frozenset({
+    "ppermute", "all_gather", "psum", "pmean", "psum_scatter",
+    "all_to_all", "pshuffle",
+})
+#: RV107 home: the one package allowed to spell collectives.
+_COLLECTIVE_DIR = "distributed"
+
+#: RV108: axis-name literal shapes, and the module housing the
+#: constants (exempt — it *defines* them).
+_AXIS_LITERAL_RE = re.compile(r"^(r|m\d+)$")
+_AXIS_HOME = "distributed/mesh.py"
 
 
 def rule_catalog() -> str:
@@ -204,6 +243,8 @@ def lint_source(src: str, relpath: str) -> list[Finding]:
     clock_ok = (
         _in_dirs(relpath, _WALLCLOCK_DIRS) or relpath in _WALLCLOCK_FILES
     )
+    in_distributed = _in_dirs(relpath, (_COLLECTIVE_DIR,))
+    axis_scoped = in_distributed and relpath != _AXIS_HOME
 
     for node in ast.walk(tree):
         # RV101 -------------------------------------------------------
@@ -287,6 +328,39 @@ def lint_source(src: str, relpath: str) -> list[Finding]:
             emit(
                 "RV106", node,
                 "importing the removed pallas_dispatch_count shim",
+            )
+        # RV107 -------------------------------------------------------
+        if not in_distributed:
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain and chain[-1] in _COLLECTIVE_NAMES and (
+                    "lax" in chain or chain[0] == "jax"
+                ):
+                    emit(
+                        "RV107", node,
+                        f"`{'.'.join(chain)}(...)` outside distributed/: "
+                        f"collectives must go through distributed/ring.py "
+                        f"or the sweep builders so repro.verify.comm can "
+                        f"account their bytes",
+                    )
+            if isinstance(node, ast.ImportFrom) and \
+                    (node.module or "").startswith("jax.lax"):
+                for a in node.names:
+                    if a.name in _COLLECTIVE_NAMES:
+                        emit(
+                            "RV107", node,
+                            f"importing collective `{a.name}` from "
+                            f"jax.lax outside distributed/",
+                        )
+        # RV108 -------------------------------------------------------
+        if axis_scoped and isinstance(node, ast.Constant) and \
+                isinstance(node.value, str) and \
+                _AXIS_LITERAL_RE.match(node.value):
+            emit(
+                "RV108", node,
+                f"hard-coded mesh-axis literal '{node.value}': use "
+                f"mesh.RANK_AXIS / mesh.mode_axis(k) so axis renames "
+                f"stay one-line changes",
             )
     return findings
 

@@ -115,6 +115,50 @@ def test_main_exit_codes(tmp_path, capsys):
     assert main([old, str(tmp_path / "missing.json")]) == 2
 
 
+def test_discovery_skips_gracefully_below_two_files(tmp_path, capsys):
+    """A young repo (or a fresh fork) has no trajectory to hold yet:
+    auto-discovery with fewer than two BENCH_*.json is a skip, not a
+    failure."""
+    assert main(["--bench-dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "skipped" in out and "0 BENCH_*.json" in out
+    _bench(tmp_path, "BENCH_2025-01-01.json", [_row("a", 100.0)])
+    assert main(["--bench-dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "skipped" in out and "1 BENCH_*.json" in out
+    assert "BENCH_2025-01-01.json" in out
+
+
+def test_discovery_compares_two_newest(tmp_path, capsys):
+    _bench(tmp_path, "BENCH_2025-01-01.json", [_row("a", 1.0)])
+    _bench(tmp_path, "BENCH_2025-02-01.json", [_row("a", 100.0)])
+    _bench(tmp_path, "BENCH_2025-03-01.json", [_row("a", 110.0)])
+    # the newest pair is 100 -> 110 us (within threshold); the stale
+    # 1.0-us file would fail 110x over — proving it isn't compared
+    assert main(["--bench-dir", str(tmp_path)]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_discovery_catches_regression(tmp_path, capsys):
+    _bench(tmp_path, "BENCH_2025-01-01.json", [_row("a", 100.0)])
+    _bench(tmp_path, "BENCH_2025-02-01.json", [_row("a", 1000.0)])
+    assert main(["--bench-dir", str(tmp_path)]) == 1
+    assert "PERF REGRESSION" in capsys.readouterr().err
+
+
+def test_discovery_ignores_non_bench_json(tmp_path, capsys):
+    _bench(tmp_path, "results.json", [_row("a", 1.0)])
+    _bench(tmp_path, "BENCH_1.json", [_row("a", 1.0)])
+    assert main(["--bench-dir", str(tmp_path)]) == 0
+    assert "skipped" in capsys.readouterr().out
+
+
+def test_single_positional_is_usage_error(tmp_path, capsys):
+    old = _bench(tmp_path, "BENCH_x.json", [_row("a", 1.0)])
+    assert main([old]) == 2
+    assert "both OLD and NEW" in capsys.readouterr().err
+
+
 def test_load_bench_roundtrip(tmp_path):
     path = _bench(tmp_path, "b.json", [_row("x", 1.5, "d=1")])
     loaded = load_bench(path)
