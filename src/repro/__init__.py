@@ -28,6 +28,12 @@ programs, the tune subsystem) remains importable under its module path
 ``repro.tune``) but is not part of the frozen surface.
 """
 
+from .engine.batch import (
+    BatchedCPResult,
+    BatchedTuckerResult,
+    cp_als_batched,
+    tucker_hooi_batched,
+)
 from .engine.context import Distribution, ExecutionContext
 from .engine.execute import contract_partial, mttkrp, multi_ttm
 from .engine.plan import BlockPlan, Memory, MultiTTMPlan
@@ -36,7 +42,7 @@ from .core.tucker import TuckerResult, tucker_hooi
 from .distributed.grid_select import select_grid, select_tucker_grid
 from .observe.trace import Trace
 
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 __all__ = [
     "ExecutionContext",
@@ -48,10 +54,14 @@ __all__ = [
     "contract_partial",
     "multi_ttm",
     "cp_als",
+    "cp_als_batched",
     "cp_gradient",
     "CPResult",
+    "BatchedCPResult",
     "tucker_hooi",
+    "tucker_hooi_batched",
     "TuckerResult",
+    "BatchedTuckerResult",
     "select_grid",
     "select_tucker_grid",
     "Trace",

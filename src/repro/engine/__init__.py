@@ -12,6 +12,9 @@ Layering (see docs/ARCHITECTURE.md):
     context   — ExecutionContext: the one immutable config object + the
                 validation catalog + the deprecated-kwarg shim
     execute   — mttkrp(x, factors, mode, ctx=...) + partial contractions
+                (a leading batch axis vmaps B problems over ONE plan)
+    batch     — cp_als_batched / tucker_hooi_batched: B decompositions
+                as one vmapped sweep with per-element convergence masks
     tree      — all-mode MTTKRP / ALS sweeps over a binary dimension tree
 """
 
@@ -38,6 +41,13 @@ from .plan import (
     mttkrp_traffic_model,
     uniform_block_feasible,
     uniform_multi_ttm_plan,
+)
+from .batch import (
+    BatchedCPResult,
+    BatchedTuckerResult,
+    batched_choose_blocks,
+    cp_als_batched,
+    tucker_hooi_batched,
 )
 from .execute import mttkrp, contract_partial, multi_ttm
 from .tree import all_mode_mttkrp, dimtree_als_sweep
@@ -66,6 +76,11 @@ __all__ = [
     "mttkrp",
     "contract_partial",
     "multi_ttm",
+    "BatchedCPResult",
+    "BatchedTuckerResult",
+    "batched_choose_blocks",
+    "cp_als_batched",
+    "tucker_hooi_batched",
     "all_mode_mttkrp",
     "dimtree_als_sweep",
 ]

@@ -313,6 +313,14 @@ class ExecutionContext:
     #: default: the False path adds no ops and no trace-unsafe work, so
     #: compiled HLO is identical to a pre-observability build.
     observe: bool = False
+    #: Directory for JAX's persistent compilation cache
+    #: (``jax.experimental.compilation_cache``). When set, drivers and the
+    #: serving layer call :meth:`ensure_compilation_cache` before their
+    #: first dispatch, so a *second* process serving the same buckets
+    #: warm-starts: XLA reloads the compiled programs from disk instead of
+    #: recompiling (the cold/warm split ``benchmarks/serve.py`` measures).
+    #: None (the default) leaves the process-global JAX config untouched.
+    compilation_cache: str | None = None
 
     # -- eager validation (every construction path runs this) --------------
     def __post_init__(self):
@@ -361,6 +369,47 @@ class ExecutionContext:
                 "decisions without a problem spec: use for_problem(...) "
                 "to pin plan resolutions"
             )
+        if self.compilation_cache is not None and not isinstance(
+            self.compilation_cache, str
+        ):
+            raise ValueError(
+                f"compilation_cache must be a directory path (str) or "
+                f"None, got {type(self.compilation_cache).__name__}"
+            )
+
+    def ensure_compilation_cache(self) -> str | None:
+        """Point JAX's persistent compilation cache at this context's
+        ``compilation_cache`` directory (no-op when the field is None).
+
+        Sets the process-global JAX config — cache dir plus the two
+        thresholds that would otherwise skip small CPU programs — so
+        every compile after this call is written to (and on a warm
+        start, read from) the directory. Idempotent; returns the
+        directory actually configured. This is the MaxText
+        microbenchmark warm-start pattern: a fresh process pays zero
+        recompiles for buckets an earlier process already served.
+        """
+        if self.compilation_cache is None:
+            return None
+        import jax
+
+        os.makedirs(self.compilation_cache, exist_ok=True)
+        already = (
+            jax.config.jax_compilation_cache_dir == self.compilation_cache
+        )
+        jax.config.update("jax_compilation_cache_dir", self.compilation_cache)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        if not already:
+            # the persistent-cache singleton is memoized at the process's
+            # FIRST compile; without a reset, a dir configured after that
+            # compile is silently ignored
+            from jax.experimental.compilation_cache import (
+                compilation_cache as _cc,
+            )
+
+            _cc.reset_cache()
+        return self.compilation_cache
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -382,6 +431,7 @@ class ExecutionContext:
         check_rep: bool | None = None,
         overlap: str = "none",
         observe: bool = False,
+        compilation_cache: str | None = None,
     ) -> "ExecutionContext":
         """Build and eagerly validate a context — THE constructor.
 
@@ -416,7 +466,7 @@ class ExecutionContext:
             backend=backend, memory=memory, out_dtype=out_dtype,
             compute_dtype=compute_dtype, interpret=interpret, tune=tune,
             cache_path=cache_path, distribution=dist,
-            observe=bool(observe),
+            observe=bool(observe), compilation_cache=compilation_cache,
         )
 
     @classmethod
@@ -723,6 +773,7 @@ class ExecutionContext:
             ),
             "decisions": [d.to_dict() for d in self.decisions],
             "observe": self.observe,
+            "compilation_cache": self.compilation_cache,
         }
 
     @classmethod
@@ -760,6 +811,8 @@ class ExecutionContext:
             ),
             # absent in pre-observability JSON: old artifacts stay loadable
             observe=bool(d.get("observe", False)),
+            # absent in pre-serving JSON: old artifacts stay loadable
+            compilation_cache=d.get("compilation_cache"),
         )
 
     def to_json(self, *, indent: int | None = None) -> str:

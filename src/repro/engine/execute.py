@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import math
 import time
+from dataclasses import replace
 from typing import Sequence
 
 import jax
@@ -163,6 +164,11 @@ def mttkrp(
         {"backend": backend, "memory": memory, "interpret": interpret,
          "tune": tune},
     )
+    if x.ndim == len(factors) + 1:
+        # leading batch axis: B independent MTTKRPs under ONE resolved plan
+        return _mttkrp_batched(
+            x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
+        )
     if not _otrace.should_record(ctx.observe, x, *factors):
         return _mttkrp_impl(
             x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
@@ -174,7 +180,7 @@ def mttkrp(
             x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
             _span=span,
         )
-    rank = next(f.shape[1] for k, f in enumerate(factors) if k != mode)
+    rank = next(f.shape[-1] for k, f in enumerate(factors) if k != mode)
     _record_mttkrp_span(
         "mttkrp", ctx, tuple(x.shape), rank, mode, x.dtype.itemsize,
         span, t0,
@@ -299,6 +305,104 @@ def _mode_first(shape: Sequence[int], mode: int) -> tuple[int, ...]:
     )
 
 
+# ---------------------------------------------------------------------------
+# Batched dispatch: a leading B axis, ONE plan, ONE program
+# ---------------------------------------------------------------------------
+
+def _concrete_ctx(ctx: ExecutionContext, backend: str) -> ExecutionContext:
+    """The context the vmapped element dispatch runs under: the backend
+    the bucket resolved to, pinned (no per-element re-resolution, no
+    empirical tuning, no stale problem pinning inside the trace)."""
+    if ctx.backend == backend and not ctx.tune and ctx.problem is None:
+        return ctx
+    return replace(
+        ctx, backend=backend, tune=False, problem=None, decisions=(),
+    )
+
+
+def _batch_axes(
+    api: str, arrays: Sequence[jax.Array | None], batch: int,
+    elem_dims: Sequence[int], ranks: Sequence[object], what: str,
+) -> list[int | None]:
+    """vmap ``in_axes`` for the per-mode operands of a batched call:
+    axis 0 for per-element ``(B, I_k, R)`` stacks, ``None`` for shared
+    ``(I_k, R)`` operands (and for the ``None`` slot at a kept mode).
+    ``ranks[k]`` may be ``None`` to skip the rank-extent check."""
+    axes: list[int | None] = []
+    for k, a in enumerate(arrays):
+        if a is None:
+            axes.append(None)
+            continue
+        want = (elem_dims[k],) if ranks[k] is None \
+            else (elem_dims[k], ranks[k])
+        if a.ndim == len(want) + 1 and tuple(a.shape) == (batch,) + want:
+            axes.append(0)
+        elif a.ndim == len(want) and tuple(a.shape) == want:
+            axes.append(None)
+        else:
+            raise ValueError(
+                f"{api}: batched call (B={batch}) needs {what} {k} of "
+                f"shape {(batch,) + want} (per-element) or {want} "
+                f"(shared), got {tuple(a.shape)}"
+            )
+    return axes
+
+
+def _mttkrp_batched(
+    x, factors, mode, ctx, plan, block, out_dtype, kernel_variant,
+):
+    """B MTTKRPs as one dispatch: ``x`` is ``(B, I_0, ..., I_{N-1})``,
+    ``factors[k]`` is ``(B, I_k, R)`` (per-element) or ``(I_k, R)``
+    (shared). The ``auto`` decision is resolved ONCE against the element
+    shape — the same tune-cache key the unbatched call uses, so a bucket
+    of B requests costs one cache lookup — and ``jax.vmap`` maps the
+    element dispatch over the batch axis: the pallas backend launches
+    ONE kernel (the batch axis becomes a grid dimension), not B."""
+    batch = int(x.shape[0])
+    elem_shape = tuple(x.shape[1:])
+    rank = next(
+        int(f.shape[-1]) for k, f in enumerate(factors) if k != mode
+    )
+    axes = _batch_axes(
+        "repro.mttkrp", factors, batch, elem_shape,
+        [rank] * len(factors), "factor",
+    )
+    backend = ctx.backend
+    if backend == "auto":
+        decision = ctx.decision_for(elem_shape, rank, mode, x.dtype)
+        if decision is None:
+            from ..tune.search import resolve  # lazy: engine <-> tune
+
+            decision = resolve(
+                _mode_first(elem_shape, mode), rank, mode, x.dtype,
+                ctx.memory, cache=ctx.plan_cache(),
+            )
+        backend = decision.backend
+        plan = plan if plan is not None else decision.plan
+        block = block if block is not None else decision.block
+        kernel_variant = kernel_variant or decision.variant
+    ectx = _concrete_ctx(ctx, backend)
+
+    def one(xb, *fbs):
+        return _mttkrp_impl(
+            xb, list(fbs), mode, ectx, plan, block, out_dtype,
+            kernel_variant,
+        )
+
+    vmapped = jax.vmap(one, in_axes=(0, *axes))
+    if not _otrace.should_record(ctx.observe, x, *factors):
+        return vmapped(x, *factors)
+    t0 = time.perf_counter()
+    with _otrace.annotated(f"repro.mttkrp.batched.mode{mode}"):
+        out = vmapped(x, *factors)
+    span = {"backend": backend, "plan": plan}
+    _record_mttkrp_span(
+        "mttkrp", ectx, elem_shape, rank, mode, x.dtype.itemsize, span,
+        t0, batch=batch,
+    )
+    return out
+
+
 def contract_partial(
     node: jax.Array,
     factors: Sequence[jax.Array],
@@ -337,6 +441,11 @@ def contract_partial(
         {"backend": backend, "memory": memory, "interpret": interpret,
          "tune": tune},
     )
+    if node.ndim == len(modes) + int(has_rank) + 1:
+        # leading batch axis: B tree-node contractions under ONE plan
+        return _contract_partial_batched(
+            node, factors, modes, drop, has_rank, ctx, plan,
+        )
     if not _otrace.should_record(ctx.observe, node, *factors):
         return _contract_partial_impl(
             node, factors, modes, drop, has_rank, ctx, plan
@@ -466,6 +575,72 @@ def _contract_partial_impl(
     return out.astype(out_dtype) if out_dtype is not None else out
 
 
+def _contract_partial_batched(
+    node, factors, modes, drop, has_rank, ctx, plan,
+):
+    """B dimension-tree contractions as one dispatch: ``node`` carries a
+    leading batch axis ahead of its tensor modes (and trailing rank axis
+    when ``has_rank``); ``factors[m]`` for each dropped mode is
+    ``(B, I_m, R)`` or shared ``(I_m, R)``. The ``auto`` resolution runs
+    once against the element's canonical shape (``kind="partial"`` key),
+    then the element contraction is vmapped — one pallas launch."""
+    modes_t = tuple(modes)
+    drop_t = tuple(drop)
+    keep = tuple(m for m in modes_t if m not in drop_t)
+    batch = int(node.shape[0])
+    elem_shape = tuple(node.shape[1:])
+    rank = int(factors[drop_t[0]].shape[-1])
+    # factor list is indexed by mode; only dropped modes' factors are
+    # touched, so slots for kept/absent modes batch-check only if present
+    pos = {m: i for i, m in enumerate(modes_t)}
+    dims, ranks = [], []
+    for k, f in enumerate(factors):
+        if k in pos:
+            dims.append(elem_shape[pos[k]])
+        else:
+            dims.append(None if f is None else int(f.shape[-2]))
+        ranks.append(rank)
+    axes = _batch_axes(
+        "repro.contract_partial", factors, batch, dims, ranks, "factor",
+    )
+    backend = ctx.backend
+    if backend == "auto":
+        from ..tune.search import resolve  # lazy: engine <-> tune
+
+        canon_shape = (
+            math.prod(elem_shape[pos[m]] for m in keep) if keep else 1,
+        ) + tuple(elem_shape[pos[m]] for m in drop_t)
+        resolved = resolve(
+            canon_shape, rank, 0, node.dtype, ctx.memory,
+            kind="partial", x_has_rank=has_rank, cache=ctx.plan_cache(),
+        )
+        backend = resolved.backend
+        plan = plan if plan is not None else resolved.plan
+    ectx = _concrete_ctx(ctx, backend)
+
+    def one(nb, *fbs):
+        return _contract_partial_impl(
+            nb, list(fbs), modes_t, drop_t, has_rank, ectx, plan,
+        )
+
+    vmapped = jax.vmap(one, in_axes=(0, *axes))
+    if not _otrace.should_record(ctx.observe, node, *factors):
+        return vmapped(node, *factors)
+    t0 = time.perf_counter()
+    with _otrace.annotated("repro.contract_partial.batched"):
+        out = vmapped(node, *factors)
+    canon = (
+        math.prod(elem_shape[pos[m]] for m in keep) if keep else 1,
+    ) + tuple(elem_shape[pos[m]] for m in drop_t)
+    span = {"backend": backend, "plan": plan, "x_has_rank": has_rank}
+    _record_mttkrp_span(
+        "contract_partial", ectx, canon, rank, 0, node.dtype.itemsize,
+        span, t0, modes=list(modes_t), drop=list(drop_t),
+        has_rank=bool(has_rank), batch=batch,
+    )
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Multi-TTM (the Tucker/HOSVD kernel, arXiv:2207.10437)
 # ---------------------------------------------------------------------------
@@ -527,6 +702,13 @@ def multi_ttm(
     """
     if ctx is None:
         ctx = ExecutionContext.default()
+    if x.ndim == len(matrices) + 1 and _looks_batched_multi_ttm(
+        x, matrices, keep
+    ):
+        # leading batch axis: B Multi-TTMs under ONE resolved plan
+        return _multi_ttm_batched(
+            x, matrices, keep, ctx, plan, block, out_dtype,
+        )
     n = x.ndim
     if keep is not None and not 0 <= keep < n:
         raise ValueError(f"keep mode {keep} out of range for {n}-way tensor")
@@ -566,7 +748,7 @@ def multi_ttm(
 
 
 def _record_multi_ttm_span(
-    ctx, shape, ranks, keep, itemsize, span, t0
+    ctx, shape, ranks, keep, itemsize, span, t0, **extra
 ) -> None:
     """Emit one Multi-TTM dispatch event: resolved backend/plan, the
     blocked model words (``MultiTTMPlan.model_words``) and the HBL
@@ -596,6 +778,7 @@ def _record_multi_ttm_span(
         itemsize=int(itemsize),
         wall_time_us=(time.perf_counter() - t0) * 1e6,
         **_dtype_policy(ctx),
+        **extra,
     )
 
 
@@ -708,3 +891,95 @@ def _multi_ttm_impl(
         inv[axis] = pos
     out = jnp.transpose(out, inv).astype(x.dtype)
     return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def _looks_batched_multi_ttm(x, matrices, keep) -> bool:
+    """Disambiguate ``multi_ttm(x_{N+1-way}, N matrices)``: it is a
+    batched call only when every matrix is consistent with the element
+    problem ``x[b]`` — ``(B, I_k, R_k)`` per-element, ``(I_k, R_k)``
+    shared, or ``None`` at the kept mode. Anything else falls through
+    to the unbatched path so a short matrix list still raises the
+    canonical one-matrix-per-mode error."""
+    batch, elem_shape = int(x.shape[0]), tuple(x.shape[1:])
+    for k, m in enumerate(matrices):
+        if m is None:
+            if k != keep:
+                return False
+            continue
+        rows = (elem_shape[k],)
+        if not (
+            (m.ndim == 3 and tuple(m.shape[:2]) == (batch,) + rows)
+            or (m.ndim == 2 and tuple(m.shape[:1]) == rows)
+        ):
+            return False
+    return True
+
+
+def _multi_ttm_batched(x, matrices, keep, ctx, plan, block, out_dtype):
+    """B Multi-TTMs as one dispatch: ``x`` is ``(B, I_1, ..., I_N)``,
+    ``matrices[k]`` is ``(B, I_k, R_k)`` (per-element), ``(I_k, R_k)``
+    (shared), or ``None`` at the kept mode. The ``auto`` decision
+    resolves ONCE against the element shape (``kind="multi_ttm"`` key)
+    and the element contraction is vmapped over the batch — one pallas
+    launch for all B elements."""
+    n = x.ndim - 1
+    batch = int(x.shape[0])
+    elem_shape = tuple(x.shape[1:])
+    if keep is not None and not 0 <= keep < n:
+        raise ValueError(
+            f"keep mode {keep} out of range for batched {n}-way tensor"
+        )
+    for k, m in enumerate(matrices):
+        if m is None and k != keep:
+            raise ValueError(
+                f"matrix {k} is None but mode {k} is contracted "
+                f"(only matrices[keep] may be None; keep={keep})"
+            )
+    axes = _batch_axes(
+        "repro.multi_ttm", matrices, batch, elem_shape,
+        [None if m is None else int(m.shape[-1]) for m in matrices],
+        "matrix",
+    )
+    ranks = tuple(
+        int(m.shape[-1]) for k, m in enumerate(matrices) if k != keep
+    )
+    keep_key = -1 if keep is None else keep
+    canon = _keep_first(elem_shape, 0 if keep is None else keep)
+    backend = ctx.backend
+    if backend == "auto":
+        decision = None
+        if all(m is not None for m in matrices):
+            full_ranks = tuple(int(m.shape[-1]) for m in matrices)
+            decision = ctx.decision_for(
+                elem_shape, full_ranks, keep_key, x.dtype
+            )
+        if decision is None:
+            from ..tune.search import resolve_multi_ttm  # lazy cycle
+
+            decision = resolve_multi_ttm(
+                canon, ranks, keep_key, x.dtype, ctx.memory,
+                cache=ctx.plan_cache(),
+            )
+        backend = decision.backend
+        plan = plan if plan is not None else decision.plan
+        block = block if block is not None else decision.block
+    ectx = _concrete_ctx(ctx, backend)
+
+    def one(xb, *ms):
+        return _multi_ttm_impl(
+            xb, list(ms), keep, ectx, plan, block, out_dtype,
+        )
+
+    vmapped = jax.vmap(one, in_axes=(0, *axes))
+    concrete = [m for m in matrices if m is not None]
+    if not _otrace.should_record(ctx.observe, x, *concrete):
+        return vmapped(x, *matrices)
+    t0 = time.perf_counter()
+    with _otrace.annotated(f"repro.multi_ttm.batched.keep{keep}"):
+        out = vmapped(x, *matrices)
+    span = {"backend": backend, "plan": plan}
+    _record_multi_ttm_span(
+        ectx, elem_shape, ranks, keep, x.dtype.itemsize, span, t0,
+        batch=batch,
+    )
+    return out

@@ -277,6 +277,63 @@ def check_memory_itemsize(memory: Memory) -> list[Finding]:
     return out
 
 
+def check_batched_plans(
+    shapes: Sequence[Sequence[int]] = DEFAULT_SHAPES,
+    ranks: Sequence[int] = DEFAULT_RANKS,
+    memories: Sequence[Memory] = DEFAULT_MEMORIES,
+    batch_sizes: Sequence[int] = (1, 2, 4, 8),
+    chooser=None,
+) -> list[Finding]:
+    """Rule ``batched-plan-divergence``: batching never changes the plan.
+
+    The batched dispatch vmaps the element contraction, so the batch
+    axis is a kernel grid dimension — no block spans two elements, and
+    the per-instance Eq-9 working set is exactly the element working
+    set.  Therefore for every ``B`` the batched planner
+    (:func:`repro.engine.batch.batched_choose_blocks`, or an injected
+    ``chooser(B, shape, rank, itemsize, memory=...)``) must return a
+    plan EQUAL to the ``B``-independent element plan, with identical
+    ``working_set_words``.  A chooser that scales blocks or working set
+    with ``B`` is statically rejected here.
+    """
+    if chooser is None:
+        from ..engine.batch import batched_choose_blocks  # lazy: layering
+
+        chooser = batched_choose_blocks
+    findings: list[Finding] = []
+    for shape in shapes:
+        shape = tuple(shape)
+        for memory in memories:
+            itemsize = memory.itemsize
+            for rank in ranks:
+                base = choose_blocks(shape, rank, itemsize, memory=memory)
+                for b in batch_sizes:
+                    plan = chooser(b, shape, rank, itemsize, memory=memory)
+                    subject = _subject(
+                        "batched", plan, shape, f"B={b},rank={rank}"
+                    )
+                    if plan != base:
+                        findings.append(Finding(
+                            "plans", "batched-plan-divergence", subject,
+                            f"batched plan at B={b} diverged from the "
+                            f"element plan: {plan.blocks_per_mode()} != "
+                            f"{base.blocks_per_mode()} "
+                            f"(batching is vmap over the "
+                            f"element contraction; the block choice "
+                            f"must be B-independent)",
+                        ))
+                        continue
+                    if plan.working_set_words() != \
+                            base.working_set_words():
+                        findings.append(Finding(
+                            "plans", "batched-plan-divergence", subject,
+                            f"batched working set at B={b} is "
+                            f"{plan.working_set_words()}w, expected the "
+                            f"B-independent {base.working_set_words()}w",
+                        ))
+    return findings
+
+
 def _tucker_ranks(shape: Sequence[int]) -> tuple[int, ...]:
     return tuple(min(4, max(1, s // 2)) for s in shape[1:])
 
@@ -323,4 +380,5 @@ def verify_plans(
                 shape, tranks, itemsize, memory=memory
             )
             findings += check_multi_ttm_plan(tplan, shape, tranks, memory)
+    findings += check_batched_plans(shapes, ranks, memories)
     return findings

@@ -41,7 +41,36 @@ def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Str
     return _Strategy(draw)
 
 
-def settings(max_examples: int = 100, deadline=None, **_kw):
+#: ``settings(...)`` kwargs the stub understands (a subset of the real
+#: package's). Anything else raises: a kwarg silently swallowed here
+#: would pass locally and then fail (or behave differently) in CI where
+#: the real hypothesis runs. Kept in sync with the real package by
+#: ``tests/test_hypothesis_stub.py``.
+SETTINGS_KWARGS = (
+    "max_examples",
+    "deadline",
+    "derandomize",
+    "database",
+    "phases",
+    "print_blob",
+    "report_multiple_bugs",
+    "suppress_health_check",
+    "verbosity",
+    "stateful_step_count",
+)
+
+
+def settings(max_examples: int = 100, deadline=None, **kw):
+    unknown = set(kw) - set(SETTINGS_KWARGS)
+    if unknown:
+        raise TypeError(
+            f"hypothesis stub: unknown settings kwargs {sorted(unknown)} "
+            f"(known: {list(SETTINGS_KWARGS)}) — if the real hypothesis "
+            f"grew a new option, add it to SETTINGS_KWARGS in "
+            f"tests/_hypothesis_stub.py so local stub runs cannot "
+            f"silently diverge from CI"
+        )
+
     def deco(fn):
         fn._stub_max_examples = max_examples
         return fn

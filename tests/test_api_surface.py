@@ -24,10 +24,14 @@ DOCUMENTED_SURFACE = [
     "contract_partial",
     "multi_ttm",
     "cp_als",
+    "cp_als_batched",
     "cp_gradient",
     "CPResult",
+    "BatchedCPResult",
     "tucker_hooi",
+    "tucker_hooi_batched",
     "TuckerResult",
+    "BatchedTuckerResult",
     "select_grid",
     "select_tucker_grid",
     "Trace",

@@ -1,0 +1,344 @@
+"""Property-based differential suite for the batched engine path.
+
+Every batched entry point is pinned to its unbatched oracle: for random
+shapes / ranks / modes / backends, a leading-batch-axis call must equal
+a Python loop of single calls to 1e-6. The amortization claims are
+pinned too — the tune cache is consulted exactly once per batched
+``backend="auto"`` call (not once per element), and the pallas dispatch
+counter shows ONE kernel launch per batched call (vmap adds a grid
+dimension; it does not loop launches).
+
+Runs under the real ``hypothesis`` in CI and the deterministic stub
+(``tests/_hypothesis_stub.py``) locally.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.engine.batch import batched_choose_blocks
+from repro.engine.plan import Memory, choose_blocks
+from repro.observe.metrics import (
+    PALLAS_DISPATCHES,
+    TUNE_CACHE_HITS,
+    TUNE_CACHE_MISSES,
+)
+from repro.observe import registry
+from repro.tune.cache import isolated_cache
+
+BACKENDS = ("einsum", "blocked_host", "pallas")
+
+TOL = dict(rtol=1e-6, atol=1e-6)
+
+
+def _ctx(backend):
+    if backend == "pallas":
+        return repro.ExecutionContext.create(
+            backend="pallas", interpret=True, memory=Memory.abstract(2 ** 16)
+        )
+    return repro.ExecutionContext.create(backend=backend)
+
+
+def _mk_batch(batch, dims, rank, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, *kf = jax.random.split(key, len(dims) + 1)
+    x = jax.random.normal(kx, (batch,) + dims)
+    fs = [
+        jax.random.normal(k, (batch, d, rank))
+        for k, d in zip(kf, dims)
+    ]
+    return x, fs
+
+
+# ---------------------------------------------------------------------------
+# differential: batched == loop of single calls
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    batch=st.integers(1, 4),
+    d0=st.integers(2, 7),
+    d1=st.integers(2, 7),
+    d2=st.integers(2, 7),
+    rank=st.integers(1, 5),
+    mode=st.integers(0, 2),
+    backend=st.sampled_from(BACKENDS),
+)
+def test_batched_mttkrp_equals_loop(batch, d0, d1, d2, rank, mode, backend):
+    dims = (d0, d1, d2)
+    x, fs = _mk_batch(batch, dims, rank)
+    ctx = _ctx(backend)
+    out = repro.mttkrp(x, fs, mode, ctx=ctx)
+    loop = jnp.stack([
+        repro.mttkrp(x[b], [f[b] for f in fs], mode, ctx=ctx)
+        for b in range(batch)
+    ])
+    assert out.shape == (batch, dims[mode], rank)
+    np.testing.assert_allclose(out, loop, **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    d0=st.integers(2, 6),
+    d1=st.integers(2, 6),
+    d2=st.integers(2, 6),
+    keep=st.sampled_from([None, 0, 1, 2]),
+    backend=st.sampled_from(BACKENDS),
+)
+def test_batched_multi_ttm_equals_loop(batch, d0, d1, d2, keep, backend):
+    dims = (d0, d1, d2)
+    key = jax.random.PRNGKey(1)
+    kx, *km = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (batch,) + dims)
+    mats = [
+        None if k == keep
+        else jax.random.normal(km[k], (batch, d, min(2, d)))
+        for k, d in enumerate(dims)
+    ]
+    ctx = _ctx(backend)
+    out = repro.multi_ttm(x, mats, keep=keep, ctx=ctx)
+    loop = jnp.stack([
+        repro.multi_ttm(
+            x[b], [None if m is None else m[b] for m in mats],
+            keep=keep, ctx=ctx,
+        )
+        for b in range(batch)
+    ])
+    np.testing.assert_allclose(out, loop, **TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    d0=st.integers(2, 6),
+    d1=st.integers(2, 6),
+    d2=st.integers(2, 6),
+    rank=st.integers(1, 4),
+    drop=st.integers(0, 2),
+    backend=st.sampled_from(BACKENDS),
+)
+def test_batched_contract_partial_equals_loop(
+    batch, d0, d1, d2, rank, drop, backend
+):
+    dims = (d0, d1, d2)
+    x, fs = _mk_batch(batch, dims, rank, seed=2)
+    shared = [f[0] for f in fs]
+    ctx = _ctx(backend)
+    out = repro.contract_partial(
+        x, shared, (0, 1, 2), (drop,), False, ctx=ctx
+    )
+    loop = jnp.stack([
+        repro.contract_partial(
+            x[b], shared, (0, 1, 2), (drop,), False, ctx=ctx
+        )
+        for b in range(batch)
+    ])
+    np.testing.assert_allclose(out, loop, **TOL)
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    d0=st.integers(3, 6),
+    d1=st.integers(3, 6),
+    d2=st.integers(3, 6),
+    rank=st.integers(1, 3),
+    backend=st.sampled_from(("einsum", "blocked_host")),
+)
+def test_batched_cp_als_equals_loop(batch, d0, d1, d2, rank, backend):
+    dims = (d0, d1, d2)
+    from repro.core.tensor import random_factors
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (batch,) + dims)
+    keys = jax.random.split(jax.random.PRNGKey(4), batch)
+    inits = [
+        jnp.stack(f) for f in zip(*[
+            random_factors(k, dims, rank, x.dtype) for k in keys
+        ])
+    ]
+    ctx = _ctx(backend)
+    res = repro.cp_als_batched(
+        x, rank, n_iters=3, init_factors=inits, ctx=ctx
+    )
+    for b in range(batch):
+        single = repro.cp_als(
+            x[b], rank, n_iters=3,
+            init_factors=[f[b] for f in inits], ctx=ctx,
+        )
+        for k in range(3):
+            np.testing.assert_allclose(
+                res.factors[k][b], single.factors[k], rtol=1e-4, atol=1e-5
+            )
+        np.testing.assert_allclose(
+            res.weights[b], single.weights, rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            res.fits[b], single.fits[-1], rtol=1e-5, atol=1e-5
+        )
+
+
+def test_batched_cp_als_pallas_backend_matches():
+    dims, rank, batch = (6, 5, 4), 3, 3
+    from repro.core.tensor import random_factors
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (batch,) + dims)
+    keys = jax.random.split(jax.random.PRNGKey(6), batch)
+    inits = [
+        jnp.stack(f) for f in zip(*[
+            random_factors(k, dims, rank, x.dtype) for k in keys
+        ])
+    ]
+    ctx = _ctx("pallas")
+    res = repro.cp_als_batched(
+        x, rank, n_iters=3, init_factors=inits, ctx=ctx
+    )
+    ref = repro.cp_als_batched(
+        x, rank, n_iters=3, init_factors=inits, ctx=_ctx("einsum")
+    )
+    for k in range(3):
+        np.testing.assert_allclose(
+            res.factors[k], ref.factors[k], rtol=1e-4, atol=1e-5
+        )
+
+
+def test_batched_tucker_equals_loop():
+    dims, ranks, batch = (7, 6, 5), (3, 2, 2), 3
+    x = jax.random.normal(jax.random.PRNGKey(7), (batch,) + dims)
+    res = repro.tucker_hooi_batched(x, ranks, n_iters=3)
+    for b in range(batch):
+        single = repro.tucker_hooi(x[b], ranks, n_iters=3)
+        np.testing.assert_allclose(
+            res.core[b], single.core, rtol=1e-4, atol=1e-5
+        )
+        for k in range(3):
+            np.testing.assert_allclose(
+                res.factors[k][b], single.factors[k], rtol=1e-4, atol=1e-5
+            )
+        np.testing.assert_allclose(
+            res.fits[b], single.fits[-1], rtol=1e-5, atol=1e-5
+        )
+
+
+def test_shared_factors_broadcast():
+    # a shared (I_k, R) factor batches with in_axes=None: same answer as
+    # replicating it per element
+    batch, dims, rank = 3, (5, 4, 6), 2
+    x, fs = _mk_batch(batch, dims, rank, seed=8)
+    shared = [f[0] for f in fs]
+    out = repro.mttkrp(x, shared, 1)
+    tiled = repro.mttkrp(
+        x, [jnp.broadcast_to(f, (batch,) + f.shape) for f in shared], 1
+    )
+    np.testing.assert_allclose(out, tiled, **TOL)
+
+
+def test_batched_factor_shape_mismatch_raises():
+    x, fs = _mk_batch(2, (4, 4, 4), 3, seed=9)
+    bad = [fs[0], fs[1][:, :3], fs[2]]  # wrong extent on mode 1
+    with pytest.raises(ValueError, match="batched call"):
+        repro.mttkrp(x, bad, 0)
+
+
+# ---------------------------------------------------------------------------
+# amortization: cache hit once per bucket, one launch per batched call
+# ---------------------------------------------------------------------------
+
+def test_tune_cache_consulted_once_per_batched_call():
+    from repro.tune.cache import CacheEntry, cache_key, default_cache
+
+    batch, dims, rank = 4, (6, 5, 4), 3
+    x, fs = _mk_batch(batch, dims, rank, seed=10)
+    ctx = repro.ExecutionContext.create(backend="auto")
+    with isolated_cache():
+        reg = registry()
+        before = reg.snapshot()
+        repro.mttkrp(x, fs, 0, ctx=ctx)
+        d1 = reg.delta(before)
+        # ONE resolution for the whole batch: a single cache miss
+        # (``resolve`` never persists a fallback), and never one lookup
+        # per element
+        assert d1.get(TUNE_CACHE_MISSES, 0) == 1, d1
+        assert d1.get(TUNE_CACHE_HITS, 0) == 0, d1
+        # ... against one consultation per element for the looped oracle
+        before = reg.snapshot()
+        for b in range(batch):
+            repro.mttkrp(x[b], [f[b] for f in fs], 0, ctx=ctx)
+        dloop = reg.delta(before)
+        assert dloop.get(TUNE_CACHE_MISSES, 0) == batch, dloop
+        # tune the bucket (a tuned entry is what ``serve`` amortizes);
+        # the key is the *element* problem — batching never changes it
+        key = cache_key(
+            dims, rank, 0, x.dtype, Memory.tpu_vmem(itemsize=x.dtype.itemsize)
+        )
+        default_cache().put(key, CacheEntry(backend="einsum"), persist=False)
+        before = reg.snapshot()
+        repro.mttkrp(x, fs, 0, ctx=ctx)
+        d2 = reg.delta(before)
+        # the bucket is warm: exactly one hit, no new misses
+        assert d2.get(TUNE_CACHE_HITS, 0) == 1, d2
+        assert d2.get(TUNE_CACHE_MISSES, 0) == 0, d2
+
+
+def test_one_pallas_launch_per_batched_call():
+    batch, dims, rank = 5, (6, 5, 4), 3
+    x, fs = _mk_batch(batch, dims, rank, seed=11)
+    ctx = _ctx("pallas")
+    reg = registry()
+    before = reg.snapshot()
+    repro.mttkrp(x, fs, 0, ctx=ctx)
+    assert reg.delta(before).get(PALLAS_DISPATCHES, 0) == 1
+    # the looped oracle launches B times — the amortization being claimed
+    before = reg.snapshot()
+    for b in range(batch):
+        repro.mttkrp(x[b], [f[b] for f in fs], 0, ctx=ctx)
+    assert reg.delta(before).get(PALLAS_DISPATCHES, 0) == batch
+    # multi_ttm: same single-launch property
+    mats = [
+        jax.random.normal(jax.random.PRNGKey(k), (batch, d, 2))
+        for k, d in enumerate(dims)
+    ]
+    before = reg.snapshot()
+    repro.multi_ttm(x, mats, keep=None, ctx=ctx)
+    assert reg.delta(before).get(PALLAS_DISPATCHES, 0) == 1
+
+
+def test_batched_sweep_launch_count_scales_with_modes_not_batch():
+    # a full batched CP sweep on the pallas backend: one launch per mode
+    # per iteration, independent of B
+    batch, dims, rank, iters = 4, (6, 5, 4), 2, 2
+    x = jax.random.normal(jax.random.PRNGKey(12), (batch,) + dims)
+    ctx = _ctx("pallas")
+    reg = registry()
+    before = reg.snapshot()
+    repro.cp_als_batched(x, rank, n_iters=iters, ctx=ctx)
+    n = reg.delta(before).get(PALLAS_DISPATCHES, 0)
+    assert n == len(dims) * iters, n
+
+
+# ---------------------------------------------------------------------------
+# the plan is B-independent (the verify gate's dynamic counterpart)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    batch=st.integers(1, 16),
+    d0=st.integers(4, 64),
+    d1=st.integers(4, 64),
+    d2=st.integers(4, 64),
+    rank=st.integers(1, 32),
+)
+def test_batched_plan_is_element_plan(batch, d0, d1, d2, rank):
+    shape = (d0, d1, d2)
+    mem = Memory.abstract(2 ** 14)
+    assert batched_choose_blocks(
+        batch, shape, rank, 4, memory=mem
+    ) == choose_blocks(shape, rank, 4, memory=mem)
+
+
+def test_batched_choose_blocks_rejects_bad_batch():
+    with pytest.raises(ValueError, match="batch"):
+        batched_choose_blocks(0, (4, 4, 4), 2, 4)

@@ -50,6 +50,7 @@ from repro.verify.kernels import (
 )
 from repro.verify.lint import RULES, lint_source, lint_tree, rule_catalog
 from repro.verify.plans import (
+    check_batched_plans,
     check_block_plan,
     check_memory_itemsize,
     check_multi_ttm_plan,
@@ -108,6 +109,38 @@ def test_planner_sweep_is_clean():
     choose_multi_ttm_blocks / best_uniform_block never emit a plan that
     fails any static check, across the whole default lattice."""
     assert verify_plans() == []
+
+
+def test_batched_planner_sweep_is_clean():
+    """batched_choose_blocks delegates to choose_blocks, so the batched
+    plan equals the element plan (same blocks, same Eq-9 working set)
+    for every B across the default lattice — by construction, and now
+    by static proof."""
+    assert check_batched_plans() == []
+
+
+def test_batched_plan_divergence_is_flagged():
+    """Known-bad fixture: a chooser that scales the rank tile with B
+    (so the batched working set grows with the batch) is statically
+    rejected for every B > 1."""
+    from dataclasses import replace as _replace
+
+    from repro.engine.plan import choose_blocks
+
+    def bad_chooser(b, shape, rank, itemsize, memory=None):
+        base = choose_blocks(shape, rank, itemsize, memory=memory)
+        if b == 1:
+            return base
+        return _replace(base, block_r=base.block_r * b)
+
+    findings = check_batched_plans(
+        shapes=[(16, 14, 12)], ranks=[4], memories=[VMEM],
+        batch_sizes=(1, 2, 4), chooser=bad_chooser,
+    )
+    assert len(findings) == 2  # B=2 and B=4 diverge; B=1 is the base
+    assert all(f.rule == "batched-plan-divergence" for f in findings)
+    assert all(f.analyzer == "plans" for f in findings)
+    assert "B=2" in findings[0].detail or "B=2" in findings[0].subject
 
 
 # ---------------------------------------------------------------------------
